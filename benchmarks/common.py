@@ -1,0 +1,73 @@
+"""Shared benchmark harness: workloads, systems, result IO."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, is_dataclass
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synth import PROFILES, SyntheticWorkload
+from repro.serving.engine import AnalyticEngine, EngineModel
+from repro.serving.simulator import (ServingSimulator, bootstrap_frontend,
+                                     build_system)
+
+DIM = 32
+SYSTEMS = ["vllm", "gptcache", "siso-nodta", "siso"]
+
+
+def engine_model(arch: str = "qwen3-14b", n_chips: int = 8) -> EngineModel:
+    return EngineModel.from_config(get_config(arch), n_chips=n_chips)
+
+
+def workload(profile: str, n_clusters: int = 400, seed: int = 0
+             ) -> SyntheticWorkload:
+    return SyntheticWorkload(profile, dim=DIM, n_clusters=n_clusters,
+                             seed=seed)
+
+
+def four_systems(train, model: EngineModel, capacity: int,
+                 concurrency: int = 4, theta_r: float = 0.86):
+    """Bootstrapped (system, simulator) pairs for the paper's comparison."""
+    L = model.e2e(float(np.mean(train.tokens_in)),
+                  float(np.mean(train.tokens_out)))
+    out = {}
+    for kind in SYSTEMS:
+        fe = build_system(kind, dim=DIM, capacity=capacity,
+                          theta_r=theta_r, slo_latency=1.3 * L,
+                          llm_latency=L)
+        bootstrap_frontend(fe, train)
+        out[kind] = ServingSimulator(AnalyticEngine(model, concurrency),
+                                     fe)
+    return out
+
+
+def save(name: str, payload: dict, out_dir: str = "results/bench") -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+
+    def default(o):
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        if is_dataclass(o):
+            return asdict(o)
+        return str(o)
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=default)
+    return path
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

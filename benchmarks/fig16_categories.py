@@ -1,0 +1,55 @@
+"""Fig. 16 + Appendix A — SLO attainment by query category.
+
+Paper: SISO excels on Advice/Information seeking (single-turn, stable
+answers); gains shrink on Brainstorming / Coding&debugging where small
+input deltas produce chaotic outputs — but SISO still >= vLLM/GPTCache.
+Categories map to the workload's complex-cluster flag: simple clusters
+(stable answer map) vs complex clusters (chaotic answers, §6).
+"""
+import numpy as np
+
+from benchmarks.common import engine_model, four_systems, save, workload
+from repro.data.synth import WorkloadProfile
+
+
+CATEGORIES = {
+    "advice_seeking": WorkloadProfile("advice", complex_frac=0.0,
+                                      zipf_s=1.2),
+    "information_seeking": WorkloadProfile("info", complex_frac=0.0,
+                                           zipf_s=1.05),
+    "brainstorming": WorkloadProfile("brainstorm", complex_frac=1.0,
+                                     zipf_s=0.9),
+    "coding_debugging": WorkloadProfile("coding", complex_frac=1.0,
+                                        zipf_s=0.8, avg_tokens_in=60,
+                                        avg_tokens_out=300),
+}
+
+
+def run(n_train: int = 6000, n_test: int = 500) -> dict:
+    model = engine_model()
+    out = {}
+    for cat, prof in CATEGORIES.items():
+        wl = workload(prof, n_clusters=300, seed=16)
+        train = wl.sample(n_train, rps=100)
+        res = {}
+        for sysname, sim in four_systems(train, model, capacity=256).items():
+            r = sim.run(wl.sample(n_test, rps=15, cv=0.5), name=sysname)
+            res[sysname] = {"slo": r.slo_attainment, "hit": r.hit_ratio,
+                            "quality": r.mean_quality}
+        out[cat] = res
+    save("fig16_categories", out)
+    return out
+
+
+def main():
+    out = run()
+    print("fig16 (SLO attainment by category @ RPS 15):")
+    for cat, res in out.items():
+        row = " ".join(f"{s}={res[s]['slo']:.2f}" for s in res)
+        print(f"  {cat:22s} {row}  (siso hit={res['siso']['hit']:.2f} "
+              f"qual={res['siso']['quality']:.2f})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

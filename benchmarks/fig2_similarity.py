@@ -1,0 +1,41 @@
+"""Fig. 2 — duplicate vs non-duplicate cosine-similarity distributions.
+
+Paper: dup median ~0.82, non-dup ~0.62 (QQP/MRPC/MQP); thresholds above
+the non-dup median separate the populations (Observation #1).
+"""
+import numpy as np
+
+from benchmarks.common import save, workload
+
+
+def run(n_pairs: int = 4000) -> dict:
+    out = {}
+    for profile in ["qqp", "mrpc", "mqp"]:
+        wl = workload(profile, seed=2)
+        e1, e2, dup = wl.labeled_pairs(n_pairs)
+        sims = np.sum(e1 * e2, axis=1)
+        d, nd = sims[dup], sims[~dup]
+        out[profile] = {
+            "dup_median": float(np.median(d)),
+            "nondup_median": float(np.median(nd)),
+            "gap": float(np.median(d) - np.median(nd)),
+            "dup_hist": np.histogram(d, bins=20, range=(-0.2, 1.0))[0],
+            "nondup_hist": np.histogram(nd, bins=20, range=(-0.2, 1.0))[0],
+        }
+    save("fig2_similarity", out)
+    return out
+
+
+def main():
+    out = run()
+    print("fig2 (dup/non-dup median cosine):")
+    for k, v in out.items():
+        print(f"  {k:5s} dup={v['dup_median']:.3f} "
+              f"nondup={v['nondup_median']:.3f} gap={v['gap']:.3f}")
+    ok = all(v["gap"] > 0.1 for v in out.values())
+    print(f"  Observation #1 reproduced: {ok}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 6 — input-similarity vs output-similarity correlation.
+
+Paper: strong positive correlation (Observation #4) — the basis for
+threshold-controlled quality.
+"""
+import numpy as np
+
+from benchmarks.common import save, workload
+
+
+def run(n_pairs: int = 4000) -> dict:
+    out = {}
+    for profile in ["quora", "reddit", "sharegpt"]:
+        wl = workload(profile, n_clusters=400, seed=6)
+        batch = wl.sample(2 * n_pairs, rps=100)
+        v, a = batch.vectors, batch.answers
+        in_sim = np.sum(v[0::2] * v[1::2], axis=1)
+        out_sim = np.sum(a[0::2] * a[1::2], axis=1)
+        corr = float(np.corrcoef(in_sim, out_sim)[0, 1])
+        # complex-query subset: correlation should be weaker (§6)
+        cplx = batch.is_complex[0::2] & batch.is_complex[1::2]
+        corr_cplx = (float(np.corrcoef(in_sim[cplx], out_sim[cplx])[0, 1])
+                     if cplx.sum() > 10 else float("nan"))
+        out[profile] = {"corr": corr, "corr_complex": corr_cplx,
+                        "heat": np.histogram2d(in_sim, out_sim, bins=12,
+                                               range=[[-0.2, 1], [-0.2, 1]]
+                                               )[0]}
+    save("fig6_inout", out)
+    return out
+
+
+def main():
+    out = run()
+    print("fig6 (input/output similarity correlation):")
+    for prof, r in out.items():
+        print(f"  {prof:9s} corr={r['corr']:.3f} "
+              f"complex-only={r['corr_complex']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

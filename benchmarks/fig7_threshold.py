@@ -1,0 +1,47 @@
+"""Fig. 7 — cache hit ratio as a function of theta_R.
+
+Paper: theta 0.98 -> ~0.24 hit; theta 0.60 -> ~0.85 hit (Quora/Reddit).
+"""
+import numpy as np
+
+from benchmarks.common import DIM, save, workload
+from repro.core.siso import SISO, SISOConfig
+
+
+def run(n_train: int = 10000, n_test: int = 2000) -> dict:
+    out = {}
+    thetas = np.round(np.arange(0.98, 0.59, -0.04), 3)
+    for profile in ["quora", "reddit"]:
+        wl = workload(profile, n_clusters=500, seed=7)
+        train = wl.sample(n_train, rps=100)
+        test = wl.sample(n_test, rps=100)
+        siso = SISO(SISOConfig(dim=DIM, answer_dim=DIM, capacity=1024,
+                               dynamic_threshold=False))
+        siso.bootstrap(train.vectors, train.answers)
+        hits, quals = [], []
+        for th in thetas:
+            r = siso.cache.lookup(test.vectors, float(th),
+                                  update_counts=False)
+            hits.append(float(r.hit.mean()))
+            q = [float(r.answer[i] @ test.answers[i])
+                 for i in np.where(r.hit)[0]]
+            quals.append(float(np.mean(q)) if q else 1.0)
+        out[profile] = {"thetas": thetas, "hit_ratio": hits,
+                        "hit_quality": quals}
+    save("fig7_threshold", out)
+    return out
+
+
+def main():
+    out = run()
+    print("fig7 (hit ratio / answer quality vs theta_R):")
+    for prof, r in out.items():
+        print(f"  {prof}: theta  " + " ".join(f"{t:.2f}" for t in r["thetas"]))
+        print(f"    hit         " + " ".join(f"{h:.2f}" for h in r["hit_ratio"]))
+        print(f"    quality     " + " ".join(f"{q:.2f}" for q in r["hit_quality"]))
+        assert r["hit_ratio"][0] < r["hit_ratio"][-1]
+    return out
+
+
+if __name__ == "__main__":
+    main()

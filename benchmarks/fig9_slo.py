@@ -1,0 +1,59 @@
+"""Figs. 9/10/11 — SLO attainment vs RPS, vs CV, and E2E latency vs RPS
+for vLLM / GPTCache / SISO-NoDTA / SISO.
+
+Paper: SISO sustains SLO to ~1.5x the RPS of the next best; only SISO
+holds attainment under high CV; SISO's latency is lowest except at very
+low RPS where it deliberately prioritizes quality.
+"""
+import numpy as np
+
+from benchmarks.common import engine_model, four_systems, save, workload
+
+
+def run(n_train: int = 8000, n_test: int = 800) -> dict:
+    model = engine_model()
+    out = {}
+    for profile in ["msmarco", "quora", "sharegpt"]:
+        wl = workload(profile, n_clusters=400, seed=9)
+        train = wl.sample(n_train, rps=100)
+        res: dict = {"rps": [2, 5, 10, 20, 30],
+                     "cv": [0.1, 2, 5, 10]}
+        # Fig. 9: SLO vs RPS at CV=0.1
+        for sysname, sim in four_systems(train, model, capacity=512).items():
+            slo, lat = [], []
+            for rps in res["rps"]:
+                r = sim.run(wl.sample(n_test, rps=rps, cv=0.1),
+                            name=sysname)
+                slo.append(r.slo_attainment)
+                lat.append(r.mean_e2e)
+            res[f"slo_{sysname}"] = slo
+            res[f"e2e_{sysname}"] = lat
+        # Fig. 10: SLO vs CV at fixed RPS=8
+        for sysname, sim in four_systems(train, model, capacity=512).items():
+            slo_cv = []
+            for cv in res["cv"]:
+                r = sim.run(wl.sample(n_test, rps=8, cv=cv), name=sysname)
+                slo_cv.append(r.slo_attainment)
+            res[f"slo_cv_{sysname}"] = slo_cv
+        out[profile] = res
+    save("fig9_slo", out)
+    return out
+
+
+def main():
+    out = run()
+    for prof, res in out.items():
+        print(f"fig9/10/11 [{prof}]  rps={res['rps']}")
+        for s in ["vllm", "gptcache", "siso-nodta", "siso"]:
+            print(f"  slo {s:10s} "
+                  + " ".join(f"{v:.2f}" for v in res[f"slo_{s}"])
+                  + "   | cv: "
+                  + " ".join(f"{v:.2f}" for v in res[f"slo_cv_{s}"]))
+        for s in ["vllm", "siso"]:
+            print(f"  e2e {s:10s} "
+                  + " ".join(f"{v:7.2f}" for v in res[f"e2e_{s}"]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""§Roofline — aggregate the dry-run JSONs into the per-cell roofline
+table (compute/memory/collective terms, bottleneck, MODEL_FLOPS ratio).
+
+Reads results/dryrun/*.json produced by repro.launch.dryrun; fails
+gracefully (with a pointer) when the dry-run has not been run yet.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import save
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> dict:
+    recs = load()
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:80]})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute": ro["t_compute"], "t_memory": ro["t_memory"],
+            "t_collective": ro["t_collective"],
+            "bottleneck": ro["bottleneck"],
+            "useful_flops_ratio": ro["useful_flops_ratio"],
+            "roofline_fraction": ro["roofline_fraction"],
+            "mem_gib": r["live_bytes_per_device"] / 2**30,
+        })
+    rows.sort(key=lambda x: (x["mesh"], x["arch"],
+                             ORDER.index(x["shape"])
+                             if x["shape"] in ORDER else 9))
+    out = {"rows": rows,
+           "n_ok": sum(1 for x in rows if x["status"] == "ok"),
+           "n_skip": sum(1 for x in rows if x["status"] == "skip"),
+           "n_err": sum(1 for x in rows if x["status"] == "error")}
+    save("roofline_report", out)
+    return out
+
+
+def main():
+    out = run()
+    if not out["rows"]:
+        print("roofline: no dry-run results yet — run "
+              "`python -m repro.launch.dryrun` first")
+        return out
+    print(f"roofline table ({out['n_ok']} ok, {out['n_skip']} skip, "
+          f"{out['n_err']} err):")
+    hdr = (f"  {'arch':18s}{'shape':13s}{'mesh':7s}{'t_comp':>9s}{'t_mem':>9s}"
+           f"{'t_coll':>9s} {'bound':10s}{'useful':>7s}{'roof%':>7s}{'GiB':>7s}")
+    print(hdr)
+    for x in out["rows"]:
+        if x["status"] != "ok":
+            print(f"  {x['arch']:18s}{x['shape']:13s}{x['mesh']:7s} "
+                  f"[{x['status']}] {x.get('reason', '')[:60]}")
+            continue
+        print(f"  {x['arch']:18s}{x['shape']:13s}{x['mesh']:7s}"
+              f"{x['t_compute']:9.2e}{x['t_memory']:9.2e}"
+              f"{x['t_collective']:9.2e} {x['bottleneck']:10s}"
+              f"{x['useful_flops_ratio']:7.2f}"
+              f"{100 * x['roofline_fraction']:7.1f}{x['mem_gib']:7.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

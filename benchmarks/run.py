@@ -1,0 +1,58 @@
+"""Benchmark aggregator: one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3 fig9
+
+Each module's run() writes results/bench/<name>.json; main() prints the
+human summary. The roofline report additionally reads results/dryrun/.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    "fig2_similarity",      # Fig. 2  dup/non-dup similarity PDFs
+    "fig3_centroid",        # Fig. 3  centroid vs GPTCache vs Optimal
+    "fig4_policies",        # Fig. 4/12 replacement policies
+    "fig5_stability",       # Fig. 5  rank stability
+    "fig6_inout",           # Fig. 6  input/output similarity correlation
+    "fig7_threshold",       # Fig. 7  hit ratio vs theta_R
+    "fig9_slo",             # Fig. 9/10/11 SLO + latency vs RPS/CV
+    "fig13_cachesize",      # Fig. 13 hit ratio vs capacity
+    "fig15_quality",        # Fig. 14/15 win rate + F1 proxy
+    "fig16_categories",     # Fig. 16 category breakdown
+    "tab12_models",         # Tables 1/2 embedder + clustering selection
+    "tab4_latency",         # Table 4 latency breakdown
+    "roofline_report",      # EXPERIMENTS.md §Roofline table
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name in BENCHES:
+        if args.only and not any(name.startswith(o) for o in args.only):
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc(limit=6)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Quickstart: the SISO semantic cache in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Generate a calibrated query workload (stand-in for a production log).
+2. SISO-Cluster: cluster history into centroids; fill the cache.
+3. Serve: lookups at theta_R; misses go to the "LLM" and are logged.
+4. SISO-CacheManager: refresh (Algorithm 1) when +10% new queries arrive.
+"""
+import numpy as np
+
+from repro.core.siso import SISO, SISOConfig
+from repro.data.synth import SyntheticWorkload
+
+DIM = 64
+
+# --- 1. history + system ---------------------------------------------------
+wl = SyntheticWorkload("quora", dim=DIM, n_clusters=800, seed=0)
+history = wl.sample(20_000, rps=100.0)
+siso = SISO(SISOConfig(dim=DIM, answer_dim=DIM, capacity=1024,
+                       theta_c=0.86, theta_r=0.86, dynamic_threshold=False))
+
+# --- 2. offline path: cluster history into the cache ------------------------
+stats = siso.bootstrap(history.vectors, history.answers,
+                       answer_ids=np.arange(len(history.vectors)))
+print(f"bootstrap: +{stats.added} centroids, {stats.evicted} filtered -> "
+      f"{len(siso.cache.centroids)} cached (capacity {siso.cfg.capacity})")
+
+# --- 3. online path ----------------------------------------------------------
+test = wl.sample(2_000, rps=20.0)
+quality = []
+for i in range(len(test.vectors)):
+    res = siso.handle_batch(test.vectors[i], now=float(test.arrivals[i]),
+                            user_ids=test.user_ids[i:i + 1])
+    if res.hit[0]:
+        quality.append(float(res.answer[0] @ test.answers[i]))
+    else:  # miss -> "LLM" generates the answer; SISO logs it
+        siso.record_llm_answer(test.vectors[i], test.answers[i], answer_id=i)
+
+s = siso.stats()
+print(f"serving:   hit_ratio={s['hit_ratio']:.3f} "
+      f"({s['hits']} hits / {s['misses']} misses), "
+      f"hit answer quality={np.mean(quality):.3f}")
+
+# --- 4. periodic refresh (Algorithm 1) ---------------------------------------
+if siso.needs_refresh():
+    r = siso.refresh()
+    print(f"refresh:   merged={r.merged} added={r.added} evicted={r.evicted} "
+          f"-> {len(siso.cache.centroids)} centroids")
+print("done.")

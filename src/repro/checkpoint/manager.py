@@ -1,0 +1,167 @@
+"""Atomic checkpointing with retention + async write.
+
+Layout: <dir>/step_<N>/  (one .npz per top-level state key + MANIFEST)
+Atomicity: write into step_<N>.tmp-<pid>, fsync, rename — readers never
+see partial checkpoints; killed writers leave only .tmp dirs that the next
+save() garbage-collects. The semantic cache (centroid store) is state too:
+SISO exposes state_dict()/load_state() and snapshots ride along with
+params/optimizer moments.
+
+Async: save() can enqueue onto a writer thread so the train/serve loop
+never blocks on disk; wait() drains before exit or restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_BF16_TAG = "__bf16"   # np.savez stores bf16 as raw void; view as uint16
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    """Pytree -> flat {path: ndarray}; path segments joined by '/'."""
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_asdict"):          # NamedTuple (AdamWState)
+        out.update(_flatten(tree._asdict(), prefix))
+    else:
+        # bare-array state entry: "_root_" marks a leaf at the top level
+        out[prefix[:-1] if prefix else "_root_"] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    if set(flat) == {"_root_"}:
+        return flat["_root_"]
+    tree: dict = {}
+    for path, arr in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_write: bool = False):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        if async_write:
+            self._q = queue.Queue()
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ api
+
+    def save(self, step: int, state: dict[str, Any]) -> None:
+        """state: {"params": tree, "opt": AdamWState, "cache": dict, ...}"""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        if self._q is not None:
+            self._q.put((step, host))
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._q is not None:
+            self._q.join()
+
+    def restore(self, step: int) -> dict[str, Any]:
+        path = self._step_dir(step)
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        out: dict[str, Any] = {}
+        for key in manifest["keys"]:
+            with np.load(os.path.join(path, f"{key}.npz")) as z:
+                flat = {}
+                for k in z.files:
+                    if k.endswith(_BF16_TAG):
+                        flat[k[: -len(_BF16_TAG)]] = \
+                            z[k].view(ml_dtypes.bfloat16)
+                    else:
+                        flat[k] = z[k]
+                out[key] = _unflatten(flat)
+        return out
+
+    def restore_latest(self) -> tuple[int, dict[str, Any]]:
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return steps[-1], self.restore(steps[-1])
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and "tmp-" not in name:
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    # ------------------------------------------------------------- internal
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _write(self, step: int, host: dict[str, Any]) -> None:
+        final = self._step_dir(step)
+        tmp = f"{final}.tmp-{os.getpid()}"
+        # gc stale tmp dirs from killed writers
+        for name in os.listdir(self.dir):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        keys = sorted(host)
+        for key in keys:
+            flat = {}
+            for k, v in _flatten(host[key]).items():
+                if v.dtype == ml_dtypes.bfloat16:
+                    flat[k + _BF16_TAG] = v.view(np.uint16)
+                else:
+                    flat[k] = v
+            path = os.path.join(tmp, f"{key}.npz")
+            with open(path, "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump({"step": step, "keys": keys}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._retain()
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def _worker(self) -> None:
+        while True:
+            step, host = self._q.get()
+            try:
+                self._write(step, host)
+            finally:
+                self._q.task_done()

@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                get_config, list_configs)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+           "list_configs"]

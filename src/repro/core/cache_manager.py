@@ -1,0 +1,119 @@
+"""SISO-CacheManager — Algorithm 1 (merge -> filter -> update).
+
+Faithful semantics:
+  * MergeCentroids: each repository centroid either augments the
+    cluster_size of its closest cached centroid (cos-sim > theta_C) or is
+    added as a new entry with access_count = inf (fresh-entry priority).
+  * FilteringCentroids: while over capacity, evict ascending
+    (cluster_size, access_count); then decay cluster_size by /1.1 and zero
+    all access counts (lines 16–21).
+  * Update: progressive replacement in small groups so the online path is
+    never blocked (§4.2) — exposed as a chunk iterator the server drains
+    between batches.
+
+The merge loop is vectorized: repo centroids are first matched against the
+current cache in one matmul; the unmatched remainder is deduplicated
+against itself in descending cluster_size order, which is order-equivalent
+to Algorithm 1's sequential scan for any fixed processing order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.store import CentroidStore
+
+
+@dataclass
+class RefreshStats:
+    merged: int = 0
+    added: int = 0
+    evicted: int = 0
+
+
+def merge_centroids(c_cur: CentroidStore, c_repo: CentroidStore,
+                    theta_c: float) -> tuple[CentroidStore, RefreshStats]:
+    stats = RefreshStats()
+    c_new = c_cur.copy()
+    if len(c_repo) == 0:
+        return c_new, stats
+    if len(c_new) > 0:
+        sims = c_repo.vectors @ c_new.vectors.T  # (R, N)
+        closest = np.argmax(sims, axis=1)
+        best = sims[np.arange(len(c_repo)), closest]
+        hit = best > theta_c
+        # lines 9-10: absorb cluster mass into the closest cached centroid
+        np.add.at(c_new.cluster_size, closest[hit], c_repo.cluster_size[hit])
+        stats.merged = int(hit.sum())
+        rest = np.where(~hit)[0]
+    else:
+        rest = np.arange(len(c_repo))
+    if len(rest):
+        # dedupe the new ones against each other (desc cluster_size order)
+        order = rest[np.argsort(-c_repo.cluster_size[rest], kind="stable")]
+        vecs = c_repo.vectors[order]
+        sizes = c_repo.cluster_size[order].copy()
+        taken = np.zeros(len(order), bool)
+        keep_rows = []
+        for i in range(len(order)):
+            if taken[i]:
+                continue
+            sims_i = vecs[i] @ vecs[i + 1:].T if i + 1 < len(order) else \
+                np.zeros((0,))
+            dup = np.where((sims_i > theta_c) & ~taken[i + 1:])[0] + i + 1
+            sizes[i] += sizes[dup].sum()
+            taken[dup] = True
+            keep_rows.append(i)
+        keep_rows = np.asarray(keep_rows, int)
+        # lines 12-13: new centroids enter with access_count = inf
+        c_new.add(vecs[keep_rows], c_repo.answers[order][keep_rows],
+                  sizes[keep_rows], access_count=np.inf,
+                  answer_id=c_repo.answer_id[order][keep_rows])
+        stats.added = int(len(keep_rows))
+        # intra-repo duplicates absorbed into an earlier-added centroid are
+        # "merged" in Algorithm 1's sequential semantics (lines 9-10)
+        stats.merged += int(len(rest) - len(keep_rows))
+    return c_new, stats
+
+
+def filter_centroids(c_new: CentroidStore, capacity: int,
+                     decay: float = 1.1) -> tuple[CentroidStore, int]:
+    """capacity: max number of entries (TotalMemoryUsage / bytes_per_entry)."""
+    evicted = 0
+    if len(c_new) > capacity:
+        # ascending (cluster_size, access_count); evict the prefix
+        order = np.lexsort((c_new.access_count, c_new.cluster_size))
+        keep = np.sort(order[len(c_new) - capacity:])
+        evicted = len(c_new) - capacity
+        c_new.take(keep)
+    # lines 19-21: decay semantic locality; reset short-term popularity
+    c_new.cluster_size = c_new.cluster_size / decay
+    c_new.access_count = np.zeros_like(c_new.access_count)
+    return c_new, evicted
+
+
+class CacheManager:
+    """Orchestrates Algorithm 1 against a live SemanticCache."""
+
+    def __init__(self, theta_c: float = 0.86, decay: float = 1.1,
+                 update_group: int = 1024):
+        self.theta_c = theta_c
+        self.decay = decay
+        self.update_group = update_group
+
+    def plan(self, c_cur: CentroidStore, c_repo: CentroidStore,
+             capacity: int) -> tuple[CentroidStore, RefreshStats]:
+        c_new, stats = merge_centroids(c_cur, c_repo, self.theta_c)
+        c_new, stats.evicted = filter_centroids(c_new, capacity, self.decay)
+        return c_new, stats
+
+    def update_chunks(self, c_new: CentroidStore) -> Iterator[CentroidStore]:
+        """Progressive update: yield c_new in id-ordered groups; the serving
+        cache applies one group between query batches (no long lock)."""
+        n = len(c_new)
+        for s in range(0, max(n, 1), self.update_group):
+            chunk = c_new.copy()
+            chunk.take(np.arange(s, min(s + self.update_group, n)))
+            yield chunk

@@ -1,0 +1,230 @@
+"""The online semantic cache.
+
+Two regions (paper §5.2.5):
+  * centroid region — the Algorithm-1-managed centroids (no per-miss
+    replacement; refreshed occasionally by the CacheManager);
+  * spill region — any remaining capacity caches individual query vectors
+    under plain LRU.
+
+Lookup backends:
+  * "dense"  — jitted MXU-style top-1 over a padded matrix (TPU-native
+               adaptation of the paper's HNSW; exact, recall = 1);
+  * "hnsw"   — locality-ordered HNSW (CPU-fidelity path, §4.3);
+  * "pallas" — the cosine_topk kernel (interpret mode on CPU).
+Entries are ordered by cluster_size (strong semantic locality first), the
+tiled analog of SISO's hot-centroids-in-upper-HNSW-levels layout — it gives
+the Pallas kernel's early-exit tiles their hit-mass skew.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import CentroidStore
+
+
+@partial(jax.jit, static_argnames=("pad",))
+def _top1(queries: jax.Array, mat: jax.Array, valid: jax.Array, pad: int):
+    sims = queries @ mat.T  # (B, pad)
+    sims = jnp.where(valid[None, :], sims, -1.0)
+    idx = jnp.argmax(sims, axis=1)
+    return sims[jnp.arange(queries.shape[0]), idx], idx
+
+
+@dataclass
+class LookupResult:
+    hit: np.ndarray        # (B,) bool
+    sim: np.ndarray        # (B,) float32 best similarity
+    answer: np.ndarray     # (B, answer_dim) float32 (zeros on miss)
+    answer_id: np.ndarray  # (B,) int64 (-1 on miss)
+    entry: np.ndarray      # (B,) int64 row index (-1 on miss)
+    region: np.ndarray     # (B,) int8: 0 centroid, 1 spill, -1 miss
+
+
+class SemanticCache:
+    def __init__(self, dim: int, answer_dim: int, capacity: int,
+                 backend: str = "dense", spill_lru: bool = True):
+        self.dim = dim
+        self.answer_dim = answer_dim
+        self.capacity = capacity
+        self.backend = backend
+        self.spill_lru = spill_lru
+        self.centroids = CentroidStore(dim, answer_dim)
+        self.spill = CentroidStore(dim, answer_dim)
+        self._spill_clock = 0
+        self._spill_last_use: np.ndarray = np.zeros((0,), np.int64)
+        self._pad_mat: Optional[jax.Array] = None
+        self._pad_valid: Optional[jax.Array] = None
+        self._hnsw = None
+        self.hits = 0
+        self.misses = 0
+
+    # ----------------------------------------------------------------- state
+
+    @property
+    def spill_capacity(self) -> int:
+        return max(0, self.capacity - len(self.centroids))
+
+    def set_centroids(self, store: CentroidStore) -> None:
+        order = np.argsort(-store.cluster_size, kind="stable")
+        store = store.copy()
+        store.take(order)  # locality-first layout
+        self.centroids = store
+        if len(self.spill) > self.spill_capacity:  # spill shrank
+            drop = len(self.spill) - self.spill_capacity
+            keep = np.argsort(self._spill_last_use)[drop:]
+            keep = np.sort(keep)
+            self.spill.take(keep)
+            self._spill_last_use = self._spill_last_use[keep]
+        self._invalidate()
+
+    def apply_chunk(self, chunk: CentroidStore, first: bool) -> None:
+        """Progressive update entry point (CacheManager.update_chunks)."""
+        if first:
+            self._staging = CentroidStore(self.dim, self.answer_dim)
+        for i in range(len(chunk)):
+            self._staging.add(chunk.vectors[i], chunk.answers[i],
+                              chunk.cluster_size[i], chunk.access_count[i],
+                              chunk.answer_id[i])
+
+    def finish_update(self) -> None:
+        self.set_centroids(self._staging)
+        del self._staging
+
+    def _invalidate(self):
+        self._pad_mat = None
+        self._hnsw = None
+
+    # ---------------------------------------------------------------- lookup
+
+    def _matrix(self) -> tuple[jax.Array, jax.Array, int]:
+        if self._pad_mat is None:
+            n = len(self.centroids) + len(self.spill)
+            pad = max(128, 1 << (n - 1).bit_length()) if n else 128
+            mat = np.zeros((pad, self.dim), np.float32)
+            if len(self.centroids):
+                mat[: len(self.centroids)] = self.centroids.vectors
+            if len(self.spill):
+                mat[len(self.centroids): n] = self.spill.vectors
+            valid = np.zeros((pad,), bool)
+            valid[:n] = True
+            self._pad_mat = jnp.asarray(mat)
+            self._pad_valid = jnp.asarray(valid)
+            self._pad = pad
+        return self._pad_mat, self._pad_valid, self._pad
+
+    def lookup(self, queries: np.ndarray, theta_r: float,
+               update_counts: bool = True) -> LookupResult:
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        B = len(queries)
+        nc = len(self.centroids)
+        n = nc + len(self.spill)
+        if n == 0:
+            self.misses += B
+            return LookupResult(np.zeros(B, bool), np.full(B, -1.0, np.float32),
+                                np.zeros((B, self.answer_dim), np.float32),
+                                np.full(B, -1, np.int64),
+                                np.full(B, -1, np.int64),
+                                np.full(B, -1, np.int8))
+        if self.backend == "hnsw":
+            sims, idx = self._hnsw_lookup(queries)
+        elif self.backend == "pallas":
+            from repro.kernels.cosine_topk import ops as ctk_ops
+            mat, valid, _ = self._matrix()
+            s, i = ctk_ops.cosine_topk(jnp.asarray(queries), mat, k=1,
+                                       valid=valid)
+            sims, idx = np.asarray(s[:, 0]), np.asarray(i[:, 0])
+        else:
+            mat, valid, pad = self._matrix()
+            s, i = _top1(jnp.asarray(queries), mat, valid, pad)
+            sims, idx = np.asarray(s), np.asarray(i)
+        hit = sims >= theta_r
+        region = np.where(~hit, -1, np.where(idx < nc, 0, 1)).astype(np.int8)
+        answer = np.zeros((B, self.answer_dim), np.float32)
+        answer_id = np.full(B, -1, np.int64)
+        for b in np.where(hit)[0]:
+            j = int(idx[b])
+            if j < nc:
+                answer[b] = self.centroids.answers[j]
+                answer_id[b] = self.centroids.answer_id[j]
+                if update_counts:
+                    self.centroids.access_count[j] += 1
+            else:
+                sj = j - nc
+                answer[b] = self.spill.answers[sj]
+                answer_id[b] = self.spill.answer_id[sj]
+                if update_counts:
+                    self._spill_clock += 1
+                    self._spill_last_use[sj] = self._spill_clock
+        if update_counts:   # T2H probe lookups must not skew serving stats
+            self.hits += int(hit.sum())
+            self.misses += int(B - hit.sum())
+        entry = np.where(hit, idx, -1).astype(np.int64)
+        return LookupResult(hit, sims.astype(np.float32), answer, answer_id,
+                            entry, region)
+
+    def _hnsw_lookup(self, queries: np.ndarray):
+        from repro.core.hnsw import HNSW
+        if self._hnsw is None:
+            vecs = np.concatenate([self.centroids.vectors, self.spill.vectors]) \
+                if len(self.spill) else self.centroids.vectors
+            size = np.concatenate([self.centroids.cluster_size,
+                                   np.zeros(len(self.spill))]) \
+                if len(self.spill) else self.centroids.cluster_size
+            self._hnsw = HNSW.build(vecs, locality=size)
+        sims = np.full(len(queries), -1.0, np.float32)
+        idx = np.zeros(len(queries), np.int64)
+        for b, q in enumerate(queries):
+            res = self._hnsw.search(q, k=1)
+            if res:
+                idx[b], sims[b] = res[0]
+        return sims, idx
+
+    # ----------------------------------------------------------------- spill
+
+    def insert_spill(self, vector: np.ndarray, answer: np.ndarray,
+                     answer_id: int = -1) -> None:
+        """LRU insert of an individual query vector into free space."""
+        if not self.spill_lru or self.spill_capacity == 0:
+            return
+        self._spill_clock += 1
+        if len(self.spill) >= self.spill_capacity:
+            victim = int(np.argmin(self._spill_last_use))
+            self.spill.vectors[victim] = vector
+            self.spill.answers[victim] = answer
+            self.spill.answer_id[victim] = answer_id
+            self._spill_last_use[victim] = self._spill_clock
+        else:
+            self.spill.add(vector, answer, 1.0, answer_id=answer_id)
+            self._spill_last_use = np.append(self._spill_last_use,
+                                             self._spill_clock)
+        self._invalidate()
+
+    # --------------------------------------------------------------- metrics
+
+    @property
+    def hit_ratio(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+    def state_dict(self) -> dict:
+        return {"centroids": self.centroids.state_dict(),
+                "spill": self.spill.state_dict(),
+                "spill_last_use": self._spill_last_use,
+                "spill_clock": np.asarray(self._spill_clock),
+                "hits": np.asarray(self.hits),
+                "misses": np.asarray(self.misses)}
+
+    def load_state(self, state: dict) -> None:
+        self.centroids = CentroidStore.from_state(state["centroids"])
+        self.spill = CentroidStore.from_state(state["spill"])
+        self._spill_last_use = np.asarray(state["spill_last_use"], np.int64)
+        self._spill_clock = int(state["spill_clock"])
+        self.hits = int(state["hits"])
+        self.misses = int(state["misses"])
+        self._invalidate()

@@ -1,0 +1,169 @@
+"""SISO facade — the paper's full system wired together (Fig. 8).
+
+Offline path:  query log --SISO-Cluster--> centroid repository
+               --SISO-CacheManager (Alg. 1)--> semantic cache refresh
+Online path:   queries --embed--> cache lookup @ theta_R --hit--> answer
+                                   |miss--> LLM engine
+with dynamic theta_R (M/D/1 + T2H), repeated-query escape hatch, and
+individual-vector LRU spill for leftover capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cache_manager import CacheManager, RefreshStats
+from repro.core.clustering import community_detection
+from repro.core.semantic_cache import LookupResult, SemanticCache
+from repro.core.store import CentroidStore
+from repro.core.threshold import DynamicThreshold, T2HTable
+
+
+@dataclass
+class SISOConfig:
+    dim: int = 64
+    answer_dim: int = 64
+    capacity: int = 4096
+    theta_c: float = 0.86            # clustering threshold
+    theta_r: float = 0.86            # retrieval threshold (initial / fixed)
+    dynamic_threshold: bool = True
+    backend: str = "dense"
+    spill_lru: bool = True
+    repeat_sim: float = 0.99         # same-user repeat detection
+    repeat_window: float = 60.0      # seconds
+    t2h_sample_frac: float = 0.05    # paper: 5% of fresh queries
+    refresh_frac: float = 0.10       # re-cluster at +10% new queries (§4.1)
+
+
+class SISO:
+    def __init__(self, cfg: SISOConfig, slo_latency: float = 1.0,
+                 llm_latency: float = 0.5):
+        self.cfg = cfg
+        self.cache = SemanticCache(cfg.dim, cfg.answer_dim, cfg.capacity,
+                                   backend=cfg.backend,
+                                   spill_lru=cfg.spill_lru)
+        self.manager = CacheManager(theta_c=cfg.theta_c)
+        self.t2h = T2HTable(np.array([cfg.theta_r]), np.array([0.0]))
+        self.threshold = DynamicThreshold(
+            self.t2h, slo_latency=slo_latency, llm_latency=llm_latency,
+            enabled=cfg.dynamic_threshold)
+        self.threshold.theta = cfg.theta_r
+        self._user_last: dict = {}      # user -> (vec, t)
+        self._log_vecs: list = []       # accumulating query log (online)
+        self._log_answers: list = []
+        self._initial_log_size = 0
+
+    # ----------------------------------------------------------------- online
+
+    @property
+    def theta_r(self) -> float:
+        return self.threshold.theta if self.cfg.dynamic_threshold \
+            else self.cfg.theta_r
+
+    def handle_batch(self, vectors: np.ndarray, now: float = 0.0,
+                     user_ids: Optional[np.ndarray] = None) -> LookupResult:
+        """Lookup a batch of query embeddings. Repeated queries from the
+        same user are forced to miss (routed to the LLM)."""
+        vectors = np.atleast_2d(vectors)
+        for _ in vectors:
+            self.threshold.observe_arrival(now)
+        res = self.cache.lookup(vectors, self.theta_r)
+        if user_ids is not None:
+            for b, u in enumerate(user_ids):
+                prev = self._user_last.get(int(u))
+                if (prev is not None and now - prev[1] <= self.cfg.repeat_window
+                        and float(vectors[b] @ prev[0]) >= self.cfg.repeat_sim
+                        and res.hit[b]):
+                    res.hit[b] = False          # dissatisfied-user escape
+                    res.region[b] = -1
+                    res.entry[b] = -1
+                self._user_last[int(u)] = (vectors[b], now)
+        return res
+
+    def record_llm_answer(self, vector: np.ndarray, answer: np.ndarray,
+                          answer_id: int = -1) -> None:
+        """A miss came back from the LLM: log it (offline path input) and
+        LRU-insert into spare capacity."""
+        self._log_vecs.append(np.asarray(vector, np.float32))
+        self._log_answers.append((np.asarray(answer, np.float32), answer_id))
+        self.cache.insert_spill(vector, answer, answer_id)
+
+    def needs_refresh(self) -> bool:
+        base = max(self._initial_log_size, 1)
+        return len(self._log_vecs) >= self.cfg.refresh_frac * base
+
+    # ---------------------------------------------------------------- offline
+
+    def build_repository(self, vectors: np.ndarray, answers: np.ndarray,
+                         answer_ids: Optional[np.ndarray] = None
+                         ) -> CentroidStore:
+        """SISO-Cluster: log -> clusters -> repository centroids. The
+        representative's answer is stored with each centroid (§4.1)."""
+        clusters = community_detection(vectors, threshold=self.cfg.theta_c)
+        repo = CentroidStore(self.cfg.dim, self.cfg.answer_dim)
+        for c in clusters:
+            aid = int(answer_ids[c.representative]) if answer_ids is not None \
+                else -1
+            repo.add(c.centroid, answers[c.representative], c.cluster_size,
+                     answer_id=aid)
+        return repo
+
+    def bootstrap(self, vectors: np.ndarray, answers: np.ndarray,
+                  answer_ids: Optional[np.ndarray] = None,
+                  t2h_sample: Optional[np.ndarray] = None) -> RefreshStats:
+        """Initial long-history clustering + cache fill + T2H build."""
+        self._initial_log_size = len(vectors)
+        repo = self.build_repository(vectors, answers, answer_ids)
+        return self._refresh_from_repo(repo, vectors, t2h_sample)
+
+    def refresh(self, rng: Optional[np.random.Generator] = None
+                ) -> RefreshStats:
+        """Periodic re-clustering over newly accumulated queries (§4.1)."""
+        if not self._log_vecs:
+            return RefreshStats()
+        vecs = np.stack(self._log_vecs)
+        answers = np.stack([a for a, _ in self._log_answers])
+        aids = np.array([i for _, i in self._log_answers], np.int64)
+        self._initial_log_size += len(vecs)
+        self._log_vecs, self._log_answers = [], []
+        repo = self.build_repository(vecs, answers, aids)
+        return self._refresh_from_repo(repo, vecs, None, rng)
+
+    def _refresh_from_repo(self, repo: CentroidStore,
+                           fresh_vectors: np.ndarray,
+                           t2h_sample: Optional[np.ndarray] = None,
+                           rng: Optional[np.random.Generator] = None
+                           ) -> RefreshStats:
+        c_new, stats = self.manager.plan(self.cache.centroids, repo,
+                                         self.cfg.capacity)
+        first = True
+        for chunk in self.manager.update_chunks(c_new):  # progressive update
+            self.cache.apply_chunk(chunk, first)
+            first = False
+        self.cache.finish_update()
+        # T2H from a 5% sample of the fresh queries
+        if t2h_sample is None and len(fresh_vectors):
+            rng = rng or np.random.default_rng(0)
+            n = max(1, int(self.cfg.t2h_sample_frac * len(fresh_vectors)))
+            sel = rng.choice(len(fresh_vectors), size=n, replace=False)
+            t2h_sample = fresh_vectors[sel]
+        if t2h_sample is not None and len(t2h_sample):
+            self.t2h = T2HTable.build(self.cache, t2h_sample)
+            self.threshold.t2h = self.t2h
+            self.threshold.retune()
+        return stats
+
+    # --------------------------------------------------------------- metrics
+
+    def stats(self) -> dict:
+        return {
+            "hit_ratio": self.cache.hit_ratio,
+            "hits": self.cache.hits,
+            "misses": self.cache.misses,
+            "n_centroids": len(self.cache.centroids),
+            "n_spill": len(self.cache.spill),
+            "theta_r": self.theta_r,
+            "lambda": self.threshold.lam,
+        }

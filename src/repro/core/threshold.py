@@ -1,0 +1,109 @@
+"""Dynamic threshold adjustment (paper §3.3 / §4.3).
+
+M/D/1 waiting time with semantic-cache shunting:
+    E(theta)  = L * (1 - h(theta))                      (Eq. 2 service time)
+    W(theta)  = E + lambda E^2 / (2 (1 - lambda E))
+SISO picks the HIGHEST theta_R whose predicted W satisfies the SLO S. The
+h(theta) map is the T2H table sampled offline (5% of fresh queries); lambda
+is monitored online (10 s refresh); a +-10% error band feeds back observed
+waits into a theta correction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class T2HTable:
+    thetas: np.ndarray       # descending, e.g. 0.98 ... 0.60
+    hit_ratios: np.ndarray   # same length, non-decreasing as theta falls
+
+    @classmethod
+    def build(cls, cache, sample_vectors: np.ndarray,
+              thetas: np.ndarray | None = None) -> "T2HTable":
+        """One lookup pass gives best-sims; hit ratio per theta is a mean."""
+        thetas = (np.round(np.arange(0.98, 0.599, -0.02), 4)
+                  if thetas is None else np.asarray(thetas))
+        if len(sample_vectors) == 0:
+            return cls(thetas, np.zeros_like(thetas))
+        res = cache.lookup(sample_vectors, theta_r=-1.0, update_counts=False)
+        sims = res.sim
+        hit = np.array([(sims >= t).mean() for t in thetas])
+        return cls(thetas, hit)
+
+    def h(self, theta: float) -> float:
+        i = int(np.argmin(np.abs(self.thetas - theta)))
+        return float(self.hit_ratios[i])
+
+
+def mdo1_wait(lam: float, E: float) -> float:
+    """M/D/1 mean sojourn (service + queue) time; inf when unstable."""
+    rho = lam * E
+    if rho >= 1.0:
+        return float("inf")
+    return E + lam * E * E / (2.0 * (1.0 - rho))
+
+
+@dataclass
+class DynamicThreshold:
+    t2h: T2HTable
+    slo_latency: float            # S
+    llm_latency: float            # L (measured from the engine)
+    lambda_window: float = 10.0   # seconds between lambda refreshes
+    error_band: float = 0.10
+    enabled: bool = True
+    # state
+    lam: float = 0.0
+    theta: float = 0.98
+    _arrivals: list = field(default_factory=list)
+    _last_refresh: float = 0.0
+    _bias: int = 0                # feedback correction in table steps
+
+    def observe_arrival(self, t: float) -> None:
+        self._arrivals.append(t)
+        if t - self._last_refresh >= self.lambda_window:
+            horizon = t - self.lambda_window
+            self._arrivals = [a for a in self._arrivals if a >= horizon]
+            self.lam = len(self._arrivals) / self.lambda_window
+            self._last_refresh = t
+            self.retune()
+
+    def predicted_wait(self, theta: float) -> float:
+        E = self.llm_latency * (1.0 - self.t2h.h(theta))
+        return mdo1_wait(self.lam, E)
+
+    def retune(self) -> float:
+        """Pick the highest theta with W(theta) <= S (then apply feedback
+        bias). Falls back to the lowest theta when nothing is feasible."""
+        if not self.enabled:
+            self.theta = float(self.t2h.thetas[0])
+            return self.theta
+        chosen = None
+        for i, th in enumerate(self.t2h.thetas):  # descending thetas
+            if self.predicted_wait(float(th)) <= self.slo_latency:
+                chosen = i
+                break
+        if chosen is None:
+            chosen = len(self.t2h.thetas) - 1
+        chosen = int(np.clip(chosen + self._bias, 0, len(self.t2h.thetas) - 1))
+        self.theta = float(self.t2h.thetas[chosen])
+        return self.theta
+
+    def feedback(self, observed_wait: float) -> None:
+        """±10% band: if the realized wait beats/misses the model, shift the
+        operating point one table step (paper §4.3 last paragraph)."""
+        predicted = self.predicted_wait(self.theta)
+        if predicted == 0:
+            return
+        if not np.isfinite(predicted):
+            self._bias += 1
+        else:
+            err = (observed_wait - predicted) / predicted
+            if err > self.error_band:
+                self._bias += 1      # waits longer than modeled -> lower theta
+            elif err < -self.error_band and self._bias > 0:
+                self._bias -= 1
+        self._bias = int(np.clip(self._bias, 0, len(self.t2h.thetas) - 1))
+        self.retune()

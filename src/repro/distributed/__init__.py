@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, collectives, gradient
+compression, pipeline stages, elastic re-meshing, fault tolerance."""

@@ -1,0 +1,171 @@
+"""Fault tolerance + elastic scaling (DESIGN.md §6).
+
+The recovery contract for 1000+-node runs:
+
+  1. every state object (params, optimizer moments, data-iterator cursor,
+     semantic-cache snapshot) flows through the checkpoint manager
+     (repro.checkpoint) on a cadence;
+  2. on failure, the coordinator rebuilds a mesh over the surviving
+     devices (``remesh``) and re-shards the restored host-side state onto
+     it (``reshard``) — device counts may differ from save time;
+  3. stragglers are handled at two levels: hedged decode slots in the
+     serving scheduler (simulator.py) and step-time watchdogs here.
+
+On this single-process container the "cluster" is the set of XLA host
+devices, so failures are *simulated* by constructing meshes over device
+subsets — which exercises exactly the re-shard path a real deployment
+runs (jax state is host numpy between meshes; the transfer paths are the
+same device_put calls).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# elastic re-meshing
+# ---------------------------------------------------------------------------
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int
+                       ) -> tuple[int, int]:
+    """Biggest (data, model) grid over surviving devices, keeping the model
+    axis intact (TP groups must stay whole; losing one chip of a TP group
+    kills the whole group)."""
+    data = n_devices // model_parallel
+    if data < 1:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with "
+            f"{n_devices} devices")
+    return data, model_parallel
+
+
+def remesh(devices: list, model_parallel: int,
+           axis_names: tuple[str, str] = ("data", "model")) -> Mesh:
+    """Build a fresh mesh over an explicit device list (survivors)."""
+    data, model = largest_mesh_shape(len(devices), model_parallel)
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, axis_names)
+
+
+def to_host(tree: Any) -> Any:
+    """Device -> host numpy (the representation that survives a re-mesh)."""
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def reshard(tree_host: Any, specs: Any, mesh: Mesh) -> Any:
+    """Host state -> new mesh under the given PartitionSpecs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree_host, specs,
+        is_leaf=lambda x: isinstance(x, np.ndarray))
+
+
+# ---------------------------------------------------------------------------
+# failure simulation + watchdog
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: str                 # "node_loss" | "straggler" | "restart"
+    detail: str = ""
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic failure schedule for integration tests: at step s,
+    drop `lose` devices (forcing a re-mesh) or stall (watchdog path)."""
+    node_loss_steps: dict[int, int] = field(default_factory=dict)
+    events: list[FailureEvent] = field(default_factory=list)
+
+    def check(self, step: int, devices: list) -> list:
+        lose = self.node_loss_steps.get(step, 0)
+        if lose:
+            self.events.append(FailureEvent(step, "node_loss",
+                                            f"lost {lose} devices"))
+            return devices[:-lose]
+        return devices
+
+
+@dataclass
+class StepWatchdog:
+    """Detects straggling steps: if a step exceeds `factor` x the trailing
+    median, it is flagged (real deployments would hedge/evict the slow
+    host; here the signal feeds the test assertions + logs)."""
+    factor: float = 3.0
+    window: int = 16
+    _times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = False
+        if len(self._times) >= 4:
+            med = float(np.median(self._times[-self.window:]))
+            slow = dt > self.factor * med
+            if slow:
+                self.flagged.append((step, dt, med))
+        self._times.append(dt)
+        return slow
+
+
+# ---------------------------------------------------------------------------
+# recovery orchestration
+# ---------------------------------------------------------------------------
+
+
+class ElasticRunner:
+    """Drives train/serve steps with failure handling.
+
+    make_step(mesh) -> (step_fn, shard(state_host) -> state_dev,
+                        unshard(state_dev) -> state_host)
+    On injected node loss: state -> host, remesh over survivors,
+    reshard, continue. Checkpoints via the provided manager every
+    `ckpt_every` steps; restart-from-checkpoint is `resume()`.
+    """
+
+    def __init__(self, make_step: Callable, devices: Optional[list] = None,
+                 model_parallel: int = 1, injector: Optional[FaultInjector] = None,
+                 ckpt_manager=None, ckpt_every: int = 50):
+        self.make_step = make_step
+        self.devices = list(devices or jax.devices())
+        self.model_parallel = model_parallel
+        self.injector = injector or FaultInjector()
+        self.ckpt = ckpt_manager
+        self.ckpt_every = ckpt_every
+        self.watchdog = StepWatchdog()
+        self.mesh = remesh(self.devices, model_parallel)
+        self.step_fn, self.shard, self.unshard = make_step(self.mesh)
+        self.log: list[str] = []
+
+    def run(self, state_host: Any, n_steps: int, start_step: int = 0) -> Any:
+        state = self.shard(state_host)
+        for step in range(start_step, start_step + n_steps):
+            survivors = self.injector.check(step, self.devices)
+            if len(survivors) != len(self.devices):      # node failure
+                self.log.append(f"step {step}: remesh "
+                                f"{len(self.devices)}->{len(survivors)}")
+                state_host = self.unshard(state)
+                self.devices = survivors
+                self.mesh = remesh(self.devices, self.model_parallel)
+                self.step_fn, self.shard, self.unshard = \
+                    self.make_step(self.mesh)
+                state = self.shard(state_host)
+            t0 = time.perf_counter()
+            state = self.step_fn(state)
+            self.watchdog.observe(step, time.perf_counter() - t0)
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, self.unshard(state))
+        return self.unshard(state)
+
+    def resume(self) -> tuple[int, Any]:
+        assert self.ckpt is not None
+        step, state_host = self.ckpt.restore_latest()
+        return step, state_host

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel is a package: kernel.py (pl.pallas_call body + BlockSpec
+tiling), ops.py (jit'd wrapper, auto-interpret off-TPU), ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""
+from repro.kernels.cosine_topk.ops import cosine_topk  # noqa: F401
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.cosine_topk.ops import cosine_topk  # noqa: F401

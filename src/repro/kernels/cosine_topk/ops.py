@@ -1,0 +1,79 @@
+"""jit'd wrapper around the cosine_topk Pallas kernel.
+
+Pads (B, N, D) to TPU-friendly multiples, sets BlockSpecs, and runs in
+interpret mode automatically off-TPU. ``theta`` only matters with
+``early_exit=True`` (match-good-enough semantics, see kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cosine_topk.kernel import cosine_topk_kernel
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret",
+                                             "early_exit"))
+def cosine_topk(queries: jax.Array, centroids: jax.Array, k: int = 1,
+                valid: jax.Array | None = None,
+                theta: float | jax.Array = 2.0,
+                block_n: int = 512, interpret: bool | None = None,
+                early_exit: bool = False) -> tuple[jax.Array, jax.Array]:
+    """queries (B, D) x centroids (N, D) -> (sims (B, k) f32, idx (B, k) i32).
+
+    valid: (N,) bool/int — rows to consider (default all). theta=2.0 (never
+    reached) disables early exit even when compiled with early_exit=True.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, D = queries.shape
+    N = centroids.shape[0]
+    # --- padding: D to lane width, N to tile, B to sublane count ---
+    Dp = _ceil_to(max(D, 1), 128)
+    Bp = _ceil_to(max(B, 1), 8)
+    block_n = min(block_n, _ceil_to(max(N, 1), 128))
+    Np = _ceil_to(max(N, 1), block_n)
+    q = jnp.zeros((Bp, Dp), jnp.float32).at[:B, :D].set(
+        queries.astype(jnp.float32))
+    c = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(
+        centroids.astype(jnp.float32))
+    v = (jnp.ones((N,), jnp.int32) if valid is None
+         else valid.astype(jnp.int32))
+    v = jnp.zeros((1, Np), jnp.int32).at[0, :N].set(v)
+    theta_arr = jnp.asarray([theta], jnp.float32)
+
+    grid = (Np // block_n,)
+    kern = functools.partial(cosine_topk_kernel, k=k, block_n=block_n,
+                             early_exit=early_exit)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Bp, Dp), lambda t, *_: (0, 0)),      # queries
+                pl.BlockSpec((block_n, Dp), lambda t, *_: (t, 0)),  # centroid tile
+                pl.BlockSpec((1, block_n), lambda t, *_: (0, t)),   # valid tile
+            ],
+            out_specs=[
+                pl.BlockSpec((Bp, k), lambda t, *_: (0, 0)),
+                pl.BlockSpec((Bp, k), lambda t, *_: (0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(theta_arr, q, c, v)
+    vals, idx = vals[:B], idx[:B]
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals, idx

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the cosine top-k cache lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_topk_ref(queries: jax.Array, centroids: jax.Array, k: int = 1,
+                    valid: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """queries (B, D), centroids (N, D) — both rows L2-normalized.
+    Returns (top-k sims (B, k) f32, indices (B, k) i32); invalid rows score
+    -inf and ties break toward the smallest index (lax.top_k semantics)."""
+    sims = jnp.einsum("bd,nd->bn", queries, centroids,
+                      preferred_element_type=jnp.float32)
+    if valid is not None:
+        sims = jnp.where(valid[None, :] != 0, sims, -jnp.inf)
+    vals, idx = jax.lax.top_k(sims, k)
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals, idx.astype(jnp.int32)

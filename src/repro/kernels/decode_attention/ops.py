@@ -1,0 +1,89 @@
+"""jit'd wrapper for flash-decoding: (B, H, Dh) query vs (B, Lc, Hkv, Dh)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None, block_k: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """q (B, H, Dh); caches (B, Lc, Hkv, Dh); kv_len (B,) -> (B, H, Dh).
+
+    int8-KV path: pass int8 caches + k_scale/v_scale (B, Lc, Hkv) — codes
+    stream to VMEM at half width and dequantize inside the kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, Dh = q.shape
+    Lc, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    Gp = _ceil_to(G, 8)           # sublane-align the query group
+    Dp = _ceil_to(Dh, 128)
+    block_k = min(block_k, _ceil_to(Lc, 128))
+    Lp = _ceil_to(Lc, block_k)
+    quant = k_scale is not None
+
+    # (B, Hkv, G, Dh): group the H heads by their kv head
+    qg = q.reshape(B, Hkv, G, Dh)
+    qt = jnp.zeros((B, Hkv, Gp, Dp), q.dtype).at[:, :, :G, :Dh].set(qg)
+    kt = jnp.zeros((B, Hkv, Lp, Dp), k_cache.dtype) \
+        .at[:, :, :Lc, :Dh].set(k_cache.transpose(0, 2, 1, 3))
+    vt = jnp.zeros((B, Hkv, Lp, Dp), v_cache.dtype) \
+        .at[:, :, :Lc, :Dh].set(v_cache.transpose(0, 2, 1, 3))
+    args = [kv_len.astype(jnp.int32), qt, kt, vt]
+    in_specs = [
+        pl.BlockSpec((1, 1, Gp, Dp), lambda b, j, ik, *_: (b, j, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, Dp),
+                     lambda b, j, ik, *_: (b, j, ik, 0)),
+        pl.BlockSpec((1, 1, block_k, Dp),
+                     lambda b, j, ik, *_: (b, j, ik, 0)),
+    ]
+    if quant:
+        for s in (k_scale, v_scale):
+            st = jnp.zeros((B, Hkv, Lp), jnp.float32) \
+                .at[:, :, :Lc].set(s.transpose(0, 2, 1).astype(jnp.float32))
+            args.append(st)
+            in_specs.append(pl.BlockSpec(
+                (1, 1, block_k), lambda b, j, ik, *_: (b, j, ik)))
+
+    grid = (B, Hkv, Lp // block_k)
+    kern = functools.partial(decode_attention_kernel,
+                             scale=1.0 / (Dh ** 0.5), block_k=block_k)
+    if quant:
+        def kern(kvlen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                 acc_ref, m_ref, l_ref):
+            decode_attention_kernel(
+                kvlen_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                l_ref, scale=1.0 / (Dh ** 0.5), block_k=block_k,
+                ks_ref=ks_ref, vs_ref=vs_ref)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, Gp, Dp),
+                                   lambda b, j, ik, *_: (b, j, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Gp, Dp), jnp.float32),
+                pltpu.VMEM((Gp, 128), jnp.float32),
+                pltpu.VMEM((Gp, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, Dp), q.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :, :G, :Dh].reshape(B, H, Dh)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, kv_len: jax.Array
+                         ) -> jax.Array:
+    """q (B, H, Dh); k/v cache (B, Lc, Hkv, Dh); kv_len (B,) valid lengths.
+    Returns (B, H, Dh). Positions >= kv_len are masked (ring-buffer slots
+    hold only valid tokens up to kv_len by construction)."""
+    B, H, Dh = q.shape
+    Lc, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    k = jnp.repeat(k_cache, g, axis=2) if g > 1 else k_cache
+    v = jnp.repeat(v_cache, g, axis=2) if g > 1 else v_cache
+    scores = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(Dh)
+    mask = jnp.arange(Lc)[None, :] < kv_len[:, None]          # (B, Lc)
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: prefill flash attention (online softmax).
+
+Canonical q-block x kv-block schedule with MXU-aligned (128, 128) tiles.
+Grid (B, H, nQ, nK); the kv dimension is innermost so the f32 accumulator
+scratch (acc, m, l) persists across sequential grid steps on TPU. GQA is
+expressed in the k/v BlockSpec index maps (head h reads kv head
+h * Hkv // H) — no materialized repeat. Fully-masked kv blocks (causal /
+sliding window) are skipped with pl.when before any compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref,
+                           acc_ref, m_ref, l_ref, *,
+                           scale: float, block_q: int, block_k: int,
+                           causal: bool, window: int | None,
+                           prefix_len: int, q_offset: int, kv_len: int):
+    """Block shapes: q (1, 1, bq, Dh), k/v (1, 1, bk, Dh), o (1, 1, bq, Dh).
+    Scratch: acc (bq, Dh) f32, m/l (bq, 128) f32 (lane-broadcast columns).
+    q_offset = Lkv - Lq aligns right-aligned query positions; kv_len is the
+    unpadded kv length (padded tail masked off)."""
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+        m_ref[...] = jnp.full(m_ref.shape, NEG, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+
+    q_start = q_offset + iq * block_q          # global position of q row 0
+    k_start = ik * block_k
+
+    # --- block-level skip: causal => kv block strictly in the future; ---
+    # --- SWA => kv block entirely left of every query's window.        ---
+    run = True
+    if causal:
+        run = jnp.asarray(k_start <= q_start + block_q - 1)
+        if window is not None:
+            # newest query position must still see the newest kv of block
+            in_window = (q_start + block_q - 1) - (k_start + block_k - 1) \
+                < window
+            if prefix_len > 0:
+                in_window = jnp.logical_or(in_window,
+                                           k_start < prefix_len)
+            run = jnp.logical_and(run, in_window)
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len                                 # pad mask
+        if causal:
+            cm = q_pos >= k_pos
+            if window is not None:
+                cm = jnp.logical_and(cm, (q_pos - k_pos) < window)
+            if prefix_len > 0:
+                cm = jnp.logical_or(cm, k_pos < prefix_len)
+            mask = jnp.logical_and(mask, cm)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[:, :1]                                 # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m == -inf): exp(-inf - -inf) -> nan
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - safe_m), 0.0)      # (bq, 1)
+        p = jnp.exp(jnp.where(mask, s - safe_m, NEG))         # (bq, bk)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)

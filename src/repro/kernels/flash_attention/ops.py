@@ -1,0 +1,78 @@
+"""jit'd wrapper: pads to block multiples, builds grid + BlockSpecs."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "prefix_len", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    prefix_len: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None
+                    ) -> jax.Array:
+    """q (B, Lq, H, Dh), k/v (B, Lkv, Hkv, Dh) -> (B, Lq, H, Dh).
+    Right-aligned query positions (q_pos = Lkv - Lq + i), GQA via index
+    maps, optional sliding window + bidirectional prefix."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Lq, H, Dh = q.shape
+    Lkv, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    block_q = min(block_q, _ceil_to(Lq, 8))
+    block_k = min(block_k, _ceil_to(Lkv, 128))
+    Lqp, Lkp = _ceil_to(Lq, block_q), _ceil_to(Lkv, block_k)
+    Dp = _ceil_to(Dh, 128)
+
+    # (B, H, L, D) layout; zero-pad tails (masked off inside the kernel)
+    qt = jnp.zeros((B, H, Lqp, Dp), q.dtype).at[:, :, :Lq, :Dh].set(
+        q.transpose(0, 2, 1, 3))
+    kt = jnp.zeros((B, Hkv, Lkp, Dp), k.dtype).at[:, :, :Lkv, :Dh].set(
+        k.transpose(0, 2, 1, 3))
+    vt = jnp.zeros((B, Hkv, Lkp, Dp), v.dtype).at[:, :, :Lkv, :Dh].set(
+        v.transpose(0, 2, 1, 3))
+
+    grid = (B, H, Lqp // block_q, Lkp // block_k)
+    kern = functools.partial(
+        flash_attention_kernel, scale=1.0 / (Dh ** 0.5), block_q=block_q,
+        block_k=block_k, causal=causal, window=window, prefix_len=prefix_len,
+        q_offset=Lkv - Lq, kv_len=Lkv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dp),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, Dp),
+                         lambda b, h, iq, ik, hkv=Hkv, hh=H:
+                         (b, (h * hkv) // hh, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dp),
+                         lambda b, h, iq, ik, hkv=Hkv, hh=H:
+                         (b, (h * hkv) // hh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dp),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lqp, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((block_q, Dp), jnp.float32),
+            pltpu_vmem((block_q, 128), jnp.float32),
+            pltpu_vmem((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Lq, :Dh].transpose(0, 2, 1, 3)
+
+
+def pltpu_vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

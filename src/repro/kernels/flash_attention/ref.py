@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: masked softmax attention with GQA / SWA / prefix-LM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  prefix_len: int = 0) -> jax.Array:
+    """q (B, Lq, H, Dh), k/v (B, Lkv, Hkv, Dh) -> (B, Lq, H, Dh).
+
+    Mask (matching models.layers.flash_attention): causal with optional
+    sliding window, and a bidirectional prefix of length prefix_len
+    (prefix-LM). q positions are right-aligned: q_pos = Lkv - Lq + i.
+    """
+    B, Lq, H, Dh = q.shape
+    Lkv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kq = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vq = jnp.repeat(v, g, axis=2) if g > 1 else v
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) / jnp.sqrt(Dh)
+    q_pos = (Lkv - Lq) + jnp.arange(Lq)[:, None]
+    k_pos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if causal:
+        mask = q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        if prefix_len:
+            mask |= k_pos < prefix_len
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

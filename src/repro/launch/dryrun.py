@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: jax.jit(step, in_shardings, out_shardings, donate).lower()
+.compile() against ShapeDtypeStruct inputs (no allocation), then extract
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms,
+  * collective bytes   — parsed from the optimized per-partition HLO.
+Results land as JSON under results/dryrun/ for EXPERIMENTS.md §Dry-run and
+the roofline table; failures are bugs in the sharding config.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen3-14b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both   # all 40 cells
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_cost as HC
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             policy=None, keep_hlo: bool = False) -> dict:
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    reason = S.skip_reason(arch, shape_name)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return rec
+    t0 = time.time()
+    try:
+        policy = policy or S.cell_policy(arch, shape_name)
+        specs = S.input_specs(arch, shape_name, policy)
+        step, in_sh, out_sh, donate = S.cell_shardings(
+            arch, shape_name, mesh, policy)
+        argnames = list(specs)
+        donate_nums = tuple(argnames.index(a) for a in donate)
+        with mesh:
+            jitted = jax.jit(step,
+                             in_shardings=tuple(in_sh[a] for a in argnames),
+                             out_shardings=out_sh,
+                             donate_argnums=donate_nums)
+            lowered = jitted.lower(*[specs[a] for a in argnames])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware cost model (XLA's cost_analysis counts while
+        # bodies once — ~160x undercount on scanned layer stacks)
+        cost = HC.analyze(hlo)
+        coll = H.collective_stats(hlo, keep_lines=8)   # per-line detail
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        mf = H.model_flops(cfg, shape)
+        n_dev = mesh.devices.size
+        # minimum-bytes floor: params once + decode-state once (global)
+        import numpy as _np
+        param_bytes = sum(
+            int(_np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree.leaves(specs["params"]))
+        state_bytes = 0
+        if "cache" in specs:
+            state_bytes = sum(
+                int(_np.prod(x.shape)) * x.dtype.itemsize
+                for x in jax.tree.leaves(specs["cache"]))
+        mb = float(param_bytes + state_bytes)
+        mem = {k: int(getattr(ma, k, 0) or 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")}
+        live = (mem["argument_size_in_bytes"] + mem["output_size_in_bytes"]
+                + mem["temp_size_in_bytes"] - mem["alias_size_in_bytes"])
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops_per_device=float(cost.flops),
+            bytes_per_device=float(cost.dot_bytes),   # fused lower bound
+            bytes_unfused_per_device=float(cost.bytes),
+            xla_flops_single_trip=float(ca.get("flops", 0.0)),
+            xla_bytes_single_trip=float(ca.get("bytes accessed", 0.0)),
+            memory=mem,
+            live_bytes_per_device=int(live),
+            collective_bytes=float(cost.coll_bytes),
+            collective_by_op={k: float(v)
+                              for k, v in cost.coll_wire.items()},
+            collective_counts={k: float(v)
+                               for k, v in cost.coll_count.items()},
+            top_collectives=[(op, b, g, ln[:140])
+                             for op, b, g, ln in coll.ops],
+            model_flops_total=mf,
+            model_bytes_total=mb,
+            n_devices=int(n_dev),
+            active_params=int(cfg.active_params),
+            total_params=int(cfg.total_params),
+        )
+        roof = H.Roofline(arch, shape_name, mesh_name,
+                          rec["flops_per_device"], rec["bytes_per_device"],
+                          rec["collective_bytes"], mf, int(n_dev),
+                          peak_memory_bytes=live, model_bytes_total=mb)
+        rec["roofline"] = roof.to_dict()
+        if keep_hlo:
+            rec["hlo_ops"] = H.op_census(hlo)
+    except Exception as e:  # a failure here is a sharding/config bug
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc(limit=8))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", nargs="*", default=ARCH_IDS)
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply §Perf winning policies (steps.OPTIMIZED)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": False, "multi": True}
+    wanted = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    n_err = 0
+    for mesh_name in wanted:
+        mesh = make_production_mesh(multi_pod=meshes[mesh_name])
+        for arch in args.arch:
+            for shape_name in args.shape:
+                pol = (S.optimized_policy(arch, shape_name)
+                       if args.optimized else None)
+                rec = run_cell(arch, shape_name, mesh, mesh_name,
+                               policy=pol, keep_hlo=args.keep_hlo)
+                tag = f"{arch}|{shape_name}|{mesh_name}"
+                path = os.path.join(
+                    args.out, f"{arch}_{shape_name}_{mesh_name}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    if not args.quiet:
+                        print(f"OK    {tag:44s} compile={rec['compile_s']:7.1f}s "
+                              f"mem={rec['live_bytes_per_device']/2**30:6.2f}GiB "
+                              f"tc={r['t_compute']:.2e} tm={r['t_memory']:.2e} "
+                              f"tx={r['t_collective']:.2e} -> {r['bottleneck']}",
+                              flush=True)
+                elif rec["status"] == "skip":
+                    if not args.quiet:
+                        print(f"SKIP  {tag:44s} {rec['reason']}", flush=True)
+                else:
+                    n_err += 1
+                    print(f"ERROR {tag:44s} {rec['error']}", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

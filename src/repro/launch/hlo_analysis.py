@@ -1,0 +1,203 @@
+"""Post-compile HLO analysis: collective bytes, op census, roofline terms.
+
+collective_bytes is NOT in cost_analysis(): we parse the optimized HLO
+(compiled.as_text(), post-SPMD so shapes are per-partition) and sum operand
+sizes of every collective op. Wire-byte model per op (g = group size):
+
+    all-reduce          2 * S * (g-1)/g     (ring RS + AG)
+    all-gather          S_out * (g-1)/g
+    reduce-scatter      S_out * (g-1)       (input = S_out * g)
+    all-to-all          S * (g-1)/g
+    collective-permute  S                   (point-to-point)
+
+Hardware constants used for the three roofline terms are the TPU v5e class
+figures given in the assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-reduce-done|all-reduce|all-gather-start|"
+    r"all-gather-done|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute-start|collective-permute-done|collective-permute)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2048,5120]' or '(f32[8], f32[8,16])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [d0,d1]<=[N]: groups are rows of the (d0, d1) iota -> size d1
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    count_by_op: dict = field(default_factory=Counter)
+    ops: list = field(default_factory=list)   # (op, wire_bytes, group, line)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+
+def collective_stats(hlo_text: str, keep_lines: int = 0) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):        # async pair: count the -start only
+            continue
+        base = op.replace("-start", "")
+        size = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if base == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif base == "all-gather":
+            wire = size * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = size * (g - 1)
+        elif base == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                            # collective-permute
+            wire = float(size)
+        stats.bytes_by_op[base] += wire
+        stats.count_by_op[base] += 1
+        if keep_lines:
+            stats.ops.append((base, wire, g, line.strip()[:180]))
+            if len(stats.ops) > keep_lines:
+                stats.ops = sorted(stats.ops, key=lambda t: -t[1])[:keep_lines]
+    return stats
+
+
+def op_census(hlo_text: str, top: int = 12) -> list[tuple[str, int]]:
+    """Most frequent HLO op kinds — remat/redundancy smell test."""
+    ops = Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w-]*)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops.most_common(top)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_total: float
+    n_devices: int
+    peak_memory_bytes: float = 0.0
+    # minimum required HBM traffic (params read once + state read once),
+    # the ideal floor for memory-bound (decode) cells
+    model_bytes_total: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global). >1 means XLA undercounts
+        (fused ops); <1 means remat/redundant compute."""
+        hlo_total = self.flops_per_device * self.n_devices
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """Ideal step time: useful flops at peak MXU vs minimum-bytes at
+        peak HBM — whichever bound is higher is the cell's true roof."""
+        return max(self.model_flops_total / (self.n_devices * PEAK_FLOPS),
+                   self.model_bytes_total / (self.n_devices * HBM_BW))
+
+    @property
+    def roofline_fraction(self) -> float:
+        """t_ideal / modeled step time — the fraction of roofline this
+        lowering achieves (1.0 = at the roof)."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_ideal / t_step if t_step else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_total": self.model_flops_total,
+            "n_devices": self.n_devices,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_bytes_total": self.model_bytes_total,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "t_ideal": self.t_ideal,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for train, 2*N*D for inference forward passes
+    (D = processed tokens; N = active matmul params)."""
+    n_act = cfg.active_params
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens

@@ -1,0 +1,306 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's compiled.cost_analysis() counts while-loop bodies ONCE, so any
+scanned program (layer stacks, grad accumulation, flash-attention tile
+loops) under-reports flops/bytes by the trip count (~160x for a 40-layer,
+accum-4 train step). This module re-derives costs from the optimized HLO
+text with loop multiplication:
+
+  cost(while)       = trip_count(condition) * cost(body)
+  cost(fusion)      = flops(called) + boundary bytes (operands + result)
+  cost(call)        = cost(called) + boundary bytes
+  cost(conditional) = max over branches
+  flops(dot)        = 2 * prod(result dims) * prod(lhs contracting dims)
+  bytes(op)         = operands + result of materialized ops
+                      (parameter/constant/tuple/gte/bitcast excluded)
+
+Collectives are classified exactly as in hlo_analysis.collective_stats and
+inherit loop multiplication (a per-layer all-reduce inside a scan counts
+n_layers times). Wire-byte model is shared with hlo_analysis.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_analysis import (_DTYPE_BYTES, _GROUPS_IOTA_RE,
+                                       _GROUPS_RE, _SHAPE_RE, _shape_bytes)
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_INST_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)")
+_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_ATTR_WHILE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "token", "while", "call",
+               "conditional", "iota", "partition-id", "replica-id"}
+
+_COLLS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute"}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0      # op-boundary traffic (unfused upper bound)
+    dot_bytes: float = 0.0  # matmul-boundary traffic (fused lower bound —
+    #                         what a TPU backend with fused elementwise
+    #                         chains / Pallas attention actually streams)
+    coll_wire: dict = field(default_factory=dict)   # base op -> bytes
+    coll_count: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.dot_bytes += other.dot_bytes * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] = self.coll_wire.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll_wire.values()))
+
+
+@dataclass
+class Instruction:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # raw text after the opening paren (operands + attrs)
+    operands: list
+
+
+def _split_operands(rest: str) -> list[str]:
+    """Names of %operand references in the call parens (top level)."""
+    depth = 0
+    out, cur = [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for tok in out:
+        m = re.match(r"\s*%([\w.\-]+)", tok)
+        names.append(m.group(1) if m else None)
+    return names
+
+
+def parse_computations(text: str) -> dict[str, list[Instruction]]:
+    comps: dict[str, list[Instruction]] = {}
+    cur: list[Instruction] | None = None
+    entry_alias = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        hm = _HEADER_RE.match(line)
+        if hm and ("=" not in line.split("(")[0]):
+            cur = []
+            comps[hm.group(1)] = cur
+            if raw.lstrip().startswith("ENTRY"):
+                entry_alias = hm.group(1)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INST_RE.match(line)
+        if im:
+            name, shape, opcode, rest = im.groups()
+            cur.append(Instruction(name, shape, opcode, rest,
+                                   _split_operands(rest)))
+    if entry_alias:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire_bytes(base: str, size: float, g: int) -> float:
+    if base == "all-reduce":
+        return 2.0 * size * (g - 1) / g
+    if base == "all-gather":
+        return size * (g - 1) / g
+    if base == "reduce-scatter":
+        return size * (g - 1)
+    if base == "all-to-all":
+        return size * (g - 1) / g
+    return float(size)          # collective-permute
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        self._memo: dict[str, Cost] = {}
+        self._trip_memo: dict[str, float] = {}
+
+    # ------------------------------------------------------------- trip count
+
+    def trip_count(self, cond_name: str) -> float:
+        if cond_name in self._trip_memo:
+            return self._trip_memo[cond_name]
+        best = 1.0
+        insts = self.comps.get(cond_name, [])
+        consts = []
+        for inst in insts:
+            consts += [int(v) for v in _CONST_INT.findall(
+                inst.opcode + "(" + inst.rest)]
+            # fused compare: look inside the called computation
+            m = _ATTR_CALLS.search(inst.rest)
+            if m:
+                for i2 in self.comps.get(m.group(1), []):
+                    consts += [int(v) for v in _CONST_INT.findall(
+                        i2.opcode + "(" + i2.rest)]
+        if consts:
+            best = float(max(consts))
+        self._trip_memo[cond_name] = best
+        return best
+
+    # ------------------------------------------------------------------ cost
+
+    def flops_of(self, comp: str) -> float:
+        """flops including nested fusions/whiles under `comp`."""
+        return self.cost(comp).flops
+
+    def cost(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()     # cycle guard
+        insts = self.comps.get(comp_name, [])
+        symtab = {i.name: i.shape for i in insts}
+        total = Cost()
+        for inst in insts:
+            op = inst.opcode
+            # --- flops ---
+            if op == "dot":
+                res = 1
+                for d in _dims(inst.shape):
+                    res *= d
+                k = 1
+                mc = _LHS_CONTRACT.search(inst.rest)
+                if mc and inst.operands and inst.operands[0] in symtab:
+                    lhs_dims = _dims(symtab[inst.operands[0]])
+                    idxs = [int(i) for i in mc.group(1).split(",") if i]
+                    for i in idxs:
+                        if i < len(lhs_dims):
+                            k *= lhs_dims[i]
+                total.flops += 2.0 * res * k
+                db = _shape_bytes(inst.shape)
+                for o in inst.operands:
+                    if o and o in symtab:
+                        # dequant/convert chains fuse into the MXU operand
+                        # stream on TPU: charge the narrow source bytes
+                        db += self._operand_stream_bytes(comp_name, o)
+                total.dot_bytes += db
+            elif op == "fusion":
+                m = _ATTR_CALLS.search(inst.rest)
+                if m:
+                    sub = self.cost(m.group(1))
+                    total.flops += sub.flops
+                    total.dot_bytes += sub.dot_bytes
+            elif op == "while":
+                m = _ATTR_WHILE.search(inst.rest)
+                if m:
+                    mt = _TRIP_RE.search(inst.rest)
+                    trips = (float(mt.group(1)) if mt
+                             else self.trip_count(m.group(1)))
+                    total.add(self.cost(m.group(2)), trips)
+            elif op == "call" or op == "async-start":
+                m = _ATTR_TO_APPLY.search(inst.rest)
+                if m:
+                    total.add(self.cost(m.group(1)))
+            elif op == "conditional":
+                m = _ATTR_BRANCHES.search(inst.rest)
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                    costs = [self.cost(b) for b in branches if b]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.bytes)
+                        total.add(best)
+            # --- collectives (at this scope) ---
+            base = op.replace("-start", "")
+            if base in _COLLS and not op.endswith("-done"):
+                size = _shape_bytes(inst.shape)
+                if base == "all-reduce" and op.endswith("-start"):
+                    # result of AR-start repeats the operand; halve tuples
+                    size = max(_shape_bytes(symtab.get(
+                        inst.operands[0] or "", inst.shape)), size // 2) \
+                        if inst.operands and inst.operands[0] else size
+                g = _group_size(inst.rest)
+                wire = _wire_bytes(base, size, g)
+                total.coll_wire[base] = total.coll_wire.get(base, 0.0) + wire
+                total.coll_count[base] = total.coll_count.get(base, 0.0) + 1
+            # --- bytes ---
+            if op in _SKIP_BYTES or base in _COLLS:
+                continue
+            b = _shape_bytes(inst.shape)
+            for o in inst.operands:
+                if o and o in symtab:
+                    b += _shape_bytes(symtab[o])
+            total.bytes += b
+        self._memo[comp_name] = total
+        return total
+
+    def _operand_stream_bytes(self, comp_name: str, operand: str) -> int:
+        """Bytes a dot operand streams from HBM: if the operand is a pure
+        widening chain (convert / scale-multiply / broadcast / reshape of
+        one array — e.g. int8 KV dequantization, bf16->f32 weight upcast),
+        charge its INPUTS, which is what a fused TPU matmul reads."""
+        insts = {i.name: i for i in self.comps.get(comp_name, [])}
+        inst = insts.get(operand)
+        if inst is None:
+            return 0
+        pure = {"convert", "multiply", "broadcast", "reshape", "bitcast",
+                "transpose", "copy", "parameter", "constant"}
+        if inst.opcode == "fusion":
+            m = _ATTR_CALLS.search(inst.rest)
+            body = self.comps.get(m.group(1), []) if m else None
+            if body is not None and all(i.opcode in pure for i in body):
+                src = sum(_shape_bytes(insts[o].shape)
+                          for o in inst.operands if o in insts)
+                return min(src, _shape_bytes(inst.shape)) or \
+                    _shape_bytes(inst.shape)
+        elif inst.opcode == "convert" and inst.operands and \
+                inst.operands[0] in insts:
+            return min(_shape_bytes(insts[inst.operands[0]].shape),
+                       _shape_bytes(inst.shape))
+        return _shape_bytes(inst.shape)
+
+    def entry_cost(self) -> Cost:
+        return self.cost("__entry__")
+
+
+def analyze(text: str) -> Cost:
+    return HloCostModel(text).entry_cost()

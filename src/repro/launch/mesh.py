@@ -1,0 +1,29 @@
+"""Production mesh construction (DESIGN.md §6).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state. Single-pod: (data=16, model=16) = 256 chips
+(TPU v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; "pod" is
+an outer data axis whose collectives cross the inter-pod links (DCN/ICI),
+which the dry-run proves shardable.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"))

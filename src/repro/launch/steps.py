@@ -1,0 +1,375 @@
+"""Step builders + input specs + per-cell sharding policy.
+
+Every (architecture x input shape) cell lowers one of three steps:
+  * train_4k      -> train_step   (fwd + chunked-CE + bwd + AdamW, FSDP)
+  * prefill_32k   -> prefill_step (full prompt -> KV cache + last logits)
+  * decode_32k /
+    long_500k     -> decode_step  (one new token vs a seq_len KV cache)
+
+The chunked cross-entropy never materializes (B, L, vocab) logits: the
+final features are scanned in seq chunks, each chunk's logits live only
+inside its scan step and are vocab-sharded over "model".
+
+CellPolicy carries the tuned distribution knobs per cell (grad-accum
+microbatches, decode-cache sequence axes, serve-mode MoE expert sharding).
+The dry-run and the perf hillclimb both read from here so EXPERIMENTS.md
+§Perf changes are reproducible by editing this table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.training import optimizer as opt
+
+# ---------------------------------------------------------------------------
+# loss: chunked cross-entropy (vocab-TP + seq chunking)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, batch: dict,
+                    chunk: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Mean next-token CE over (B, L) labels + MoE aux. Logits for one
+    seq chunk at a time; with the unembedding vocab-sharded over "model"
+    the live logits are (B, chunk, V/tp) per device."""
+    feats, aux, prefix_len = lm.forward_features(params, cfg, batch)
+    if cfg.family == "vlm":
+        feats = feats[:, prefix_len:]
+    labels = batch["labels"]
+    B, L, d = feats.shape
+    chunk = min(chunk, L)
+    while L % chunk:        # vlm text span (seq - prefix) may be odd-sized
+        chunk //= 2
+    n_chunks = L // chunk
+    f = feats[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, d)
+    f = jnp.moveaxis(f, 1, 0)                      # (n, B, chunk, d)
+    y = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+    y = jnp.moveaxis(y, 1, 0)
+
+    def body(tot, xs):
+        fc, yc = xs
+        logits = lm.unembed(params, cfg, fc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # shard-friendly gold gather: mask+reduce over the vocab-sharded
+        # dim (take_along_axis makes GSPMD all-gather the logits)
+        col = jnp.arange(logits.shape[-1], dtype=yc.dtype)
+        gold = jnp.sum(jnp.where(yc[..., None] == col, logits, 0.0), axis=-1)
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (f, y))
+    loss = total / (B * n_chunks * chunk)
+    return loss + 0.01 * aux, aux
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, accum: int = 1,
+                    optc: Optional[opt.AdamWConfig] = None,
+                    ce_chunk: int = 512):
+    optc = optc or opt.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: chunked_ce_loss(p, cfg, batch, ce_chunk),
+                has_aux=True)(params)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    lambda p: chunked_ce_loss(p, cfg, mb, ce_chunk),
+                    has_aux=True)(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = lax.scan(acc_body,
+                                        (g0, jnp.zeros((), jnp.float32)),
+                                        micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        params, opt_state, metrics = opt.apply_updates(params, grads,
+                                                       opt_state, optc)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache, pos, kv_len):
+        return lm.decode_step(params, cfg, tokens, cache, pos, kv_len)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 with_labels: bool) -> dict:
+    B, L = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        Ltxt = L - cfg.prefix_len
+        batch["tokens"] = _sds((B, Ltxt), jnp.int32)
+        batch["patch_embed"] = _sds((B, cfg.prefix_len, cfg.d_model),
+                                    jnp.float32)
+        if with_labels:
+            batch["labels"] = _sds((B, Ltxt), jnp.int32)
+        return batch
+    batch["tokens"] = _sds((B, L), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((B, cfg.enc_len, cfg.d_model), jnp.float32)
+    if with_labels:
+        batch["labels"] = _sds((B, L), jnp.int32)
+    return batch
+
+
+def params_struct(cfg: ModelConfig):
+    key = _sds((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def opt_struct(params, moment_dtype: str = "float32"):
+    return jax.eval_shape(partial(opt.init_state,
+                                  moment_dtype=moment_dtype), params)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        partial(lm.init_cache, cfg, batch, max_len))
+
+
+def input_specs(arch: str, shape_name: str,
+                policy: Optional["CellPolicy"] = None) -> dict:
+    """All inputs for the cell's step, as ShapeDtypeStructs keyed by the
+    step's argument names. A policy with kv_dtype changes the cache
+    structure, so pass the same policy used for cell_shardings."""
+    cfg = get_config(arch)
+    if policy is not None and policy.kv_dtype:
+        cfg = cfg.replace(kv_dtype=policy.kv_dtype)
+    shape = SHAPES[shape_name]
+    params = params_struct(cfg)
+    if shape.kind == "train":
+        mdt = policy.moment_dtype if policy is not None else "float32"
+        return {"params": params, "opt_state": opt_struct(params, mdt),
+                "batch": batch_struct(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": batch_struct(cfg, shape, with_labels=False),
+                "cache": cache_struct(cfg, shape.global_batch,
+                                      shape.seq_len)}
+    # decode: one new token against a seq_len cache
+    B = shape.global_batch
+    return {"params": params,
+            "tokens": _sds((B, 1), jnp.int32),
+            "cache": cache_struct(cfg, B, shape.seq_len),
+            "pos": _sds((), jnp.int32),
+            "kv_len": _sds((B,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# per-cell policy
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CellPolicy:
+    accum: int = 1                      # grad-accum microbatches (train)
+    ce_chunk: int = 512                 # CE seq chunk
+    cache_seq_axes: tuple = ("model",)  # decode KV-seq sharding axes
+    expert_data: bool = False           # serve-mode 2D MoE sharding
+    remat: bool = True                  # activation checkpointing (train)
+    donate: bool = True
+    moe_chunk_tokens: int = 0           # token-chunked MoE dispatch (§Perf)
+    moe_impl: str = ""                  # "" = config default; "shard_map"
+    kv_dtype: str = ""                  # e.g. "int8" quantized KV (§Perf)
+    bf16_boundary: bool = False         # bf16 collectives at block edges
+    fsdp_pod: bool = False              # FSDP over ("pod","data") (§Perf B4)
+    moment_dtype: str = "float32"       # AdamW moment storage (§Perf B5)
+
+
+# grad-accum sized so per-device activations + MoE dispatch buffers fit
+# 16 GB HBM alongside FSDP params/moments (measured via the dry-run's
+# memory_analysis; see EXPERIMENTS.md §Dry-run)
+_TRAIN_ACCUM = {
+    "qwen3-14b": 8, "command-r-35b": 16, "qwen2.5-14b": 8, "minicpm3-4b": 8,
+    "rwkv6-7b": 8, "mixtral-8x7b": 8, "deepseek-v2-236b": 16,
+    "zamba2-7b": 16, "paligemma-3b": 2, "whisper-base": 1,
+}
+
+# per-cell overrides applied on top of the defaults (hillclimb results
+# land here; see EXPERIMENTS.md §Perf for the change log)
+_OVERRIDES: dict[tuple[str, str], dict] = {}
+
+# §Perf winning configurations for the three hillclimbed cells (applied
+# with `dryrun --optimized`; baselines keep the defaults)
+OPTIMIZED: dict[tuple[str, str], dict] = {
+    ("mixtral-8x7b", "prefill_32k"): dict(moe_impl="shard_map",
+                                          moe_chunk_tokens=16384),
+    ("mixtral-8x7b", "train_4k"): dict(moe_impl="shard_map"),
+    ("deepseek-v2-236b", "train_4k"): dict(moe_impl="shard_map", accum=8,
+                                           fsdp_pod=True,
+                                           moment_dtype="bfloat16"),
+    ("deepseek-v2-236b", "prefill_32k"): dict(moe_impl="shard_map",
+                                              moe_chunk_tokens=16384),
+    ("qwen3-14b", "decode_32k"): dict(kv_dtype="int8"),
+}
+
+
+def optimized_policy(arch: str, shape_name: str) -> "CellPolicy":
+    base = cell_policy(arch, shape_name)
+    kw = OPTIMIZED.get((arch, shape_name))
+    return replace(base, **kw) if kw else base
+
+
+def cell_policy(arch: str, shape_name: str) -> CellPolicy:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kw: dict[str, Any] = {}
+    if shape.kind == "train":
+        kw["accum"] = _TRAIN_ACCUM.get(arch, 1)
+    if shape.kind == "decode":
+        kw["cache_seq_axes"] = (("data", "model")
+                                if shape.global_batch == 1 else ("model",))
+    if shape.kind != "train" and cfg.is_moe and cfg.n_experts % 16 == 0:
+        kw["expert_data"] = True        # deepseek-v2: 445 GB expert bytes
+    kw.update(_OVERRIDES.get((arch, shape_name), {}))
+    return CellPolicy(**kw)
+
+
+def set_override(arch: str, shape_name: str, **kw) -> None:
+    _OVERRIDES[(arch, shape_name)] = {
+        **_OVERRIDES.get((arch, shape_name), {}), **kw}
+
+
+# ---------------------------------------------------------------------------
+# shardings per cell
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def cell_shardings(arch: str, shape_name: str, mesh,
+                   policy: Optional[CellPolicy] = None):
+    """Returns (step_fn, in_shardings dict, out_shardings, donate_argnames)
+    aligned with input_specs(arch, shape_name)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pol = policy or cell_policy(arch, shape_name)
+    if not pol.remat and shape.kind == "train":
+        cfg = cfg.replace(remat=False)
+    dp = data_axes(mesh)
+    cfg = cfg.replace(act_dp=dp)       # pin activation batch to DP axes
+    from repro.models.layers import set_bf16_boundary, set_shard_mesh
+    set_shard_mesh(mesh)
+    set_bf16_boundary(pol.bf16_boundary)
+    if pol.moe_chunk_tokens:
+        cfg = cfg.replace(moe_chunk_tokens=pol.moe_chunk_tokens)
+    if pol.moe_impl:
+        cfg = cfg.replace(moe_impl=pol.moe_impl)
+    if pol.kv_dtype:
+        cfg = cfg.replace(kv_dtype=pol.kv_dtype)
+    ns = partial(shd.named, mesh)
+    pstruct = params_struct(cfg)
+
+    if shape.kind == "train":
+        fsdp_axes = (("pod", "data") if pol.fsdp_pod and "pod" in dp
+                     else ("data",))
+        pspecs = shd.param_specs(pstruct, cfg, fsdp=True,
+                                 fsdp_axes=fsdp_axes)
+        ospecs = shd.opt_state_specs(None, pspecs)
+        bspecs = shd.batch_specs(cfg, "train", dp)
+        step = make_train_step(
+            cfg, accum=pol.accum, ce_chunk=pol.ce_chunk,
+            optc=opt.AdamWConfig(moment_dtype=pol.moment_dtype))
+        in_sh = {"params": ns(pspecs), "opt_state": ns(ospecs),
+                 "batch": ns(bspecs)}
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P()),
+                      "lr": NamedSharding(mesh, P())}
+        out_sh = (ns(pspecs), ns(ospecs), metrics_sh)
+        donate = ("params", "opt_state")
+        return step, in_sh, out_sh, donate
+
+    # serving: no backward pass — remat wrappers only pin buffers (§Perf A2)
+    cfg = cfg.replace(remat=False)
+    pspecs = shd.param_specs(pstruct, cfg, fsdp=False,
+                             expert_data=pol.expert_data)
+    dp_ax = shd._dp_axis(dp)
+
+    if shape.kind == "prefill":
+        bspecs = shd.batch_specs(cfg, "prefill", dp)
+        cstruct = cache_struct(cfg, shape.global_batch, shape.seq_len)
+        cspecs = shd.cache_spec_tree(cstruct, cfg, dp,
+                                     seq_axes=pol.cache_seq_axes)
+        step = make_prefill_step(cfg)
+        in_sh = {"params": ns(pspecs), "batch": ns(bspecs),
+                 "cache": ns(cspecs)}
+        logits_sh = NamedSharding(mesh, P(dp_ax, "model"))
+        out_sh = (logits_sh, ns(cspecs))
+        return step, in_sh, out_sh, ("cache",)
+
+    # decode
+    B = shape.global_batch
+    dp_eff = dp if B % max(_dp_size(mesh, dp), 1) == 0 and B > 1 else ()
+    dp_ax = shd._dp_axis(dp_eff)
+    cfg = cfg.replace(act_dp=dp_eff)
+    cstruct = cache_struct(cfg, B, shape.seq_len)
+    cspecs = shd.cache_spec_tree(cstruct, cfg, dp_eff,
+                                 seq_axes=pol.cache_seq_axes)
+    step = make_decode_step(cfg)
+    in_sh = {"params": ns(pspecs),
+             "tokens": NamedSharding(mesh, P(dp_ax, None)),
+             "cache": ns(cspecs),
+             "pos": NamedSharding(mesh, P()),
+             "kv_len": NamedSharding(mesh, P(dp_ax))}
+    logits_sh = NamedSharding(mesh, P(dp_ax, "model"))
+    out_sh = (logits_sh, ns(cspecs))
+    return step, in_sh, out_sh, ("cache",)
+
+
+def _dp_size(mesh, dp) -> int:
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return n
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    return cfg.skip_shapes.get(shape_name)

@@ -1,0 +1,61 @@
+"""ALBERT-small-style sentence embedder (paraphrase-albert-small-v2 analog).
+
+Factorized embedding (vocab -> 128 -> d), N transformer layers with
+CROSS-LAYER WEIGHT SHARING (one parameter set applied n_layers times),
+post-LN, GELU FFN, learned-free RoPE positions, masked mean pooling and
+L2 normalization — the embedding model SISO uses for queries (Table 1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.siso_embedder import EMBED_FACTOR_DIM
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = L.split(key, 8)
+    d = cfg.d_model
+    return {
+        "tok_embed": (jax.random.normal(
+            ks[0], (cfg.vocab_size, EMBED_FACTOR_DIM), jnp.float32) * 0.02
+        ).astype(dtype),
+        "embed_proj": L.dense_init(ks[1], EMBED_FACTOR_DIM, d, dtype),
+        "embed_ln": L.layernorm_init(d, dtype),
+        # ONE shared layer (ALBERT)
+        "attn": L.gqa_init(ks[2], cfg, dtype),
+        "ln1": L.layernorm_init(d, dtype),
+        "mlp": L.mlp_init(ks[3], d, cfg.d_ff, dtype, gated=False),
+        "ln2": L.layernorm_init(d, dtype),
+    }
+
+
+def encode(p: Params, cfg: ModelConfig, tokens: jax.Array,
+           mask: jax.Array | None = None) -> jax.Array:
+    """tokens: (B, L) int32; mask: (B, L) bool (True = real token).
+    Returns L2-normalized sentence embeddings (B, d) float32."""
+    B, Lseq = tokens.shape
+    if mask is None:
+        mask = tokens > 0
+    x = p["tok_embed"][tokens] @ p["embed_proj"]
+    x = L.layernorm(p["embed_ln"], x)
+    positions = jnp.arange(Lseq)
+    for _ in range(cfg.n_layers):  # shared weights: plain python loop
+        a = L.gqa_attend(p["attn"], cfg, x, positions, causal=False,
+                         block_q=128, block_kv=128)
+        x = L.layernorm(p["ln1"], x + a)
+        m = L.mlp(p["mlp"], x, cfg.act)
+        x = L.layernorm(p["ln2"], x + m)
+    # masked mean pooling
+    w = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(x.astype(jnp.float32) * w, axis=1) / jnp.maximum(
+        jnp.sum(w, axis=1), 1.0)
+    return pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)

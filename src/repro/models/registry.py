@@ -1,0 +1,23 @@
+"""Model factory keyed by config name."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models import embedder, lm
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    if cfg.family == "embedder":
+        return embedder.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def build(name: str, reduced: bool = False):
+    """Returns (cfg, init_fn, forward_fn)."""
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "embedder":
+        return cfg, embedder.init_params, embedder.encode
+    return cfg, lm.init_params, lm.forward

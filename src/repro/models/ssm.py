@@ -1,0 +1,329 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+RWKV6 recurrence (per head, K=V=head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t: data-dependent decay)
+    y_t = r_t (S_{t-1} + diag(u . k_t) v_t^T)
+Implemented as an outer chunk scan + rematerialized inner step scan (exact;
+state crosses chunk boundaries only -> O(T/chunk) checkpoint memory). The
+matmul-chunked variant is the §Perf hillclimb target.
+
+Mamba2 SSD (scalar-per-head decay a_t = exp(dt_t * A_h)):
+    h_t = a_t h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . h_t + D x_t
+Chunked: intra-chunk via (C B^T (.) decay) matmul, inter-chunk via a chunk
+state scan. All exponents are <= 0, so no overflow is possible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (dense_init, layernorm, layernorm_init,
+                                 mlp_init, rmsnorm, rmsnorm_init, split)
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+
+
+def rwkv6_init(key, cfg, dtype) -> Params:
+    d, H, K = cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim
+    ks = split(key, 16)
+    p: Params = {
+        "ln1": layernorm_init(d, dtype),
+        "ln2": layernorm_init(d, dtype),
+        # token-shift dynamic lerp
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),  # w,k,v,r,g
+        "dd_w1": dense_init(ks[0], d, 5 * _DDLERP_RANK, dtype, scale=1e-2),
+        "dd_w2": (jax.random.normal(ks[1], (5, _DDLERP_RANK, d), jnp.float32)
+                  * 1e-2).astype(dtype),
+        # data-dependent decay
+        "w0": (jnp.zeros((d,), jnp.float32) - 0.5).astype(dtype),
+        "wa": dense_init(ks[2], d, _DECAY_RANK, dtype, scale=1e-2),
+        "wb": dense_init(ks[3], _DECAY_RANK, d, dtype, scale=1e-2),
+        "u": jnp.zeros((H, K), dtype),  # bonus ("time_faaaa")
+        "wr": dense_init(ks[4], d, d, dtype),
+        "wk": dense_init(ks[5], d, d, dtype),
+        "wv": dense_init(ks[6], d, d, dtype),
+        "wg": dense_init(ks[7], d, d, dtype),
+        "wo": dense_init(ks[8], d, d, dtype),
+        "ln_x": layernorm_init(d, dtype),  # per-head group norm (flattened)
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), dtype),
+        "cm_mu_r": jnp.zeros((d,), dtype),
+        "cm_wk": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "cm_wv": dense_init(ks[10], cfg.d_ff, d, dtype),
+        "cm_wr": dense_init(ks[11], d, d, dtype),
+    }
+    return p
+
+
+def _rwkv6_mix_inputs(p: Params, cfg, x: jax.Array, x_prev: jax.Array):
+    """Token-shift dynamic lerp producing the 5 mixed streams + r,k,v,w,g."""
+    B, L, d = x.shape
+    H, K = cfg.ssm_heads, cfg.ssm_head_dim
+    dx = x_prev - x
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    dd = jnp.tanh(xxx @ p["dd_w1"]).reshape(B, L, 5, _DDLERP_RANK)
+    offs = jnp.einsum("blfr,frd->bfld", dd, p["dd_w2"])  # (B,5,L,d)
+    mu = p["mu"].astype(x.dtype)  # (5,d)
+    mixed = x[:, None] + dx[:, None] * (mu[None, :, None, :] + offs)
+    xw, xk, xv, xr, xg = [mixed[:, i] for i in range(5)]
+    r = (xr @ p["wr"]).reshape(B, L, H, K)
+    k = (xk @ p["wk"]).reshape(B, L, H, K)
+    v = (xv @ p["wv"]).reshape(B, L, H, K)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_raw = (p["w0"].astype(jnp.float32)
+             + (jnp.tanh(xw @ p["wa"]) @ p["wb"]).astype(jnp.float32))
+    # decay in (0,1); exponent clamped for fp safety (official kernels rely
+    # on fp32 accumulation inside CUDA; we bound exp(w_raw) <= e^6)
+    w = jnp.exp(-jnp.exp(jnp.clip(w_raw, -12.0, 6.0))).reshape(B, L, H, K)
+    return r, k, v, w, g
+
+
+def rwkv6_linear_attention(r, k, v, w, u, state, chunk: int):
+    """Exact chunked recurrence.
+
+    r,k,w: (B,L,H,K); v: (B,L,H,V); u: (H,K); state: (B,H,K,V).
+    Returns (y (B,L,H,V), final state).
+    """
+    B, L, H, K = r.shape
+    V = v.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    nc = (L + pad) // chunk
+    rc = r.reshape(B, nc, chunk, H, K).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, H, K).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, H, V).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(B, nc, chunk, H, K).transpose(1, 0, 2, 3, 4)
+
+    uf = u.astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(S, inp):
+        rx, kx, vx, wx = inp  # (B,chunk,H,*)
+
+        def step(S, t):  # S: (B,H,K,V) fp32
+            rt, kt, vt, wt = (rx[:, t].astype(jnp.float32),
+                              kx[:, t].astype(jnp.float32),
+                              vx[:, t].astype(jnp.float32),
+                              wx[:, t].astype(jnp.float32))
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+            y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+            S = wt[..., None] * S + kv
+            return S, y
+
+        S, ys = lax.scan(step, S, jnp.arange(rx.shape[1]))
+        return S, ys  # ys: (chunk,B,H,V)
+
+    S, ys = lax.scan(chunk_body, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.reshape(nc * chunk, B, H, V).transpose(1, 0, 2, 3)[:, :L]
+    return y, S
+
+
+def rwkv6_time_mix(p: Params, cfg, x: jax.Array, x_prev: jax.Array,
+                   state: jax.Array, chunk: int):
+    """x: (B,L,d); x_prev: token-shifted x (decode passes carry-in).
+    Returns (out (B,L,d), new_state, last_x)."""
+    B, L, d = x.shape
+    H, K = cfg.ssm_heads, cfg.ssm_head_dim
+    r, k, v, w, g = _rwkv6_mix_inputs(p, cfg, x, x_prev)
+    y, S = rwkv6_linear_attention(r, k, v, w, p["u"], state, chunk)
+    y = y.reshape(B, L, d).astype(jnp.float32)
+    y = layernorm(p["ln_x"], y.astype(x.dtype))  # group-norm stand-in
+    out = (y * g) @ p["wo"]
+    return out, S, x[:, -1]
+
+
+def rwkv6_channel_mix(p: Params, x: jax.Array, x_prev: jax.Array):
+    dx = x_prev - x
+    xk = x + dx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"]), x[:, -1]
+
+
+def _shift(x: jax.Array, first: jax.Array | None = None) -> jax.Array:
+    """Token shift: out[t] = x[t-1]; out[0] = first (or zeros)."""
+    pad = jnp.zeros_like(x[:, :1]) if first is None else first[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv6_block(p: Params, cfg, x: jax.Array, state: Params | None, chunk: int):
+    """Full RWKV6 layer. state: None (train, zero-init) or dict with
+    s (B,H,K,V), tm_x (B,d), cm_x (B,d). Returns (x, new_state)."""
+    B, _, d = x.shape
+    H, K = cfg.ssm_heads, cfg.ssm_head_dim
+    if state is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+        tm_first = cm_first = None
+    else:
+        s0, tm_first, cm_first = state["s"], state["tm_x"], state["cm_x"]
+    h = layernorm(p["ln1"], x)
+    tm_out, s1, tm_last = rwkv6_time_mix(
+        p, cfg, h, _shift(h, tm_first), s0, chunk)
+    x = x + tm_out
+    h2 = layernorm(p["ln2"], x)
+    cm_out, cm_last = rwkv6_channel_mix(p, h2, _shift(h2, cm_first))
+    x = x + cm_out
+    return x, {"s": s1, "tm_x": tm_last, "cm_x": cm_last}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d, d_in, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = d_in + 2 * N
+    ks = split(key, 4)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           state: jax.Array | None):
+    """x: (B,L,C); w: (k,C). state: (B,k-1,C) carry-in or None.
+    Returns (y (B,L,C), new_state (B,k-1,C))."""
+    ksz = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], ksz - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+k-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(ksz)) + b
+    new_state = xp[:, xp.shape[1] - (ksz - 1):]
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, D, state, chunk: int):
+    """Mamba2 SSD. x: (B,L,H,P); dt: (B,L,H); Bm,Cm: (B,L,N);
+    state: (B,H,N,P) fp32. Returns (y (B,L,H,P), new state)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // chunk
+    Q = chunk
+    a = -jnp.exp(A_log)  # (H,) negative
+    dA = (dt.astype(jnp.float32) * a).reshape(B, nc, Q, H)  # log-decay <= 0
+    cum = jnp.cumsum(dA, axis=2)  # (B,nc,Q,H)
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    # intra-chunk: M[b,c,h,i,j] = exp(cum_i - cum_j) * dt_j * (C_i . B_j), j<=i
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    li = cum[:, :, :, None, :]   # (B,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]   # (B,nc,1,Q,H)
+    mask = (lax.iota(jnp.int32, Q)[:, None] >= lax.iota(jnp.int32, Q)[None, :])
+    # mask BEFORE exp: for j > i the gap is positive and exp overflows;
+    # where(mask, exp(gap), 0) then back-propagates 0 * inf = NaN
+    gap = jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf)
+    decay = jnp.exp(gap)         # (B,nc,Q,Q,H), upper triangle exactly 0
+    M = CB[:, :, :, :, None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # per-chunk outgoing state: sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    wj = jnp.exp(last - cum) * dtc  # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", wj,
+                         Bc.astype(jnp.float32), xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    def carry(S, inp):
+        S_c, dec = inp  # (B,H,N,P), (B,H)
+        S_new = dec[..., None, None] * S + S_c
+        return S_new, S  # emit state *entering* the chunk
+
+    (S_final, S_in) = lax.scan(
+        carry, state.astype(jnp.float32),
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc.astype(jnp.float32), S_in)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, nc * Q, H, P)[:, :L]
+    y = y + D[None, None, :, None] * x.reshape(B, nc * Q, H, P)[:, :L].astype(jnp.float32)
+    return y, S_final
+
+
+def mamba2_block(p: Params, cfg, x: jax.Array, state: Params | None,
+                 chunk: int):
+    """Full Mamba2 layer. state: None (train) or {"s": (B,H,N,P),
+    "conv": (B,k-1,conv_dim)}. Returns (x, new_state)."""
+    B, L, d = x.shape
+    d_in, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    h = rmsnorm(p["norm"], x)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32)
+                         + p["dt_bias"])  # (B,L,H)
+    conv_in = None if state is None else state["conv"]
+    xBC, conv_state = _causal_depthwise_conv(xBC, p["conv_w"], p["conv_b"],
+                                             conv_in)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_in].reshape(B, L, H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    s0 = (jnp.zeros((B, H, N, P), jnp.float32) if state is None
+          else state["s"])
+    y, S = ssd_chunked(xs, dt, p["A_log"], Bm, Cm, p["D"], s0, chunk)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = rmsnorm(p["gn"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    return x + out, {"s": S, "conv": conv_state}
+
+
+def mamba2_decode_step(p: Params, cfg, x: jax.Array, state: Params):
+    """Single-token O(1) state update. x: (B,1,d)."""
+    B, _, d = x.shape
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rmsnorm(p["norm"], x)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    xBC, conv_state = _causal_depthwise_conv(xBC, p["conv_w"], p["conv_b"],
+                                             state["conv"])
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_in].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC[..., d_in:d_in + N].reshape(B, N).astype(jnp.float32)
+    Cm = xBC[..., d_in + N:].reshape(B, N).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt[:, 0] * a)  # (B,H)
+    S = state["s"] * dec[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt[:, 0], Bm, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["gn"], y * jax.nn.silu(z))
+    return x + y @ p["out_proj"], {"s": S, "conv": conv_state}

@@ -1,0 +1,1 @@
+"""Serving layer: engines, continuous batching, SLO simulator, baselines."""

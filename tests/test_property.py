@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_manager import filter_centroids, merge_centroids
+from repro.core.store import CentroidStore
+from repro.core.threshold import T2HTable, mdo1_wait
+from repro.data.synth import SyntheticWorkload
+
+
+def _unit_np(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+
+
+@st.composite
+def stores(draw, max_n=24, d=8):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(0, max_n))
+    sizes = draw(st.lists(st.floats(0.5, 100.0), min_size=n, max_size=n))
+    st_ = CentroidStore(d, d)
+    if n:
+        v = _unit_np(seed, n, d)
+        st_.add(v, v, np.asarray(sizes))
+    return st_
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 invariants
+# ---------------------------------------------------------------------------
+
+
+@given(stores(), stores(), st.floats(0.5, 0.99))
+@settings(max_examples=40, deadline=None)
+def test_merge_conserves_cluster_mass(cur, repo, theta_c):
+    """Every repo centroid's mass lands somewhere: absorbed or added."""
+    total_in = cur.cluster_size.sum() + repo.cluster_size.sum()
+    merged, stats = merge_centroids(cur, repo, theta_c)
+    assert merged.cluster_size.sum() == pytest.approx(total_in, rel=1e-6)
+    assert stats.merged + stats.added == len(repo)
+
+
+@given(stores(max_n=32), st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_filter_capacity_and_decay(store, capacity):
+    before = np.sort(store.cluster_size)[::-1]
+    out, evicted = filter_centroids(store.copy(), capacity)
+    assert len(out) <= capacity
+    assert evicted == max(0, len(before) - capacity)
+    assert (out.access_count == 0).all()
+    if len(out):
+        # survivors are the largest cluster_sizes (ties by access_count)
+        kept = np.sort(out.cluster_size * 1.1)[::-1]
+        np.testing.assert_allclose(kept, before[: len(kept)], rtol=1e-6)
+
+
+@given(stores(), stores(), st.floats(0.6, 0.95), st.integers(1, 20))
+@settings(max_examples=30, deadline=None)
+def test_plan_is_idempotent_on_capacity(cur, repo, theta_c, capacity):
+    from repro.core.cache_manager import CacheManager
+    mgr = CacheManager(theta_c=theta_c)
+    out, _ = mgr.plan(cur, repo, capacity)
+    assert len(out) <= capacity
+
+
+# ---------------------------------------------------------------------------
+# M/D/1 + T2H invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.0, 5.0), st.floats(0.01, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_mdo1_at_least_service(lam, E):
+    w = mdo1_wait(lam, E)
+    assert w >= E or w == float("inf")
+
+
+@given(st.lists(st.floats(-1.0, 1.0), min_size=5, max_size=50),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_t2h_monotone_from_any_sims(sims, seed):
+    thetas = np.round(np.arange(0.98, 0.599, -0.02), 4)
+    sims_arr = np.asarray(sims, np.float32)
+    hits = np.asarray([(sims_arr >= t).mean() for t in thetas])
+    t = T2HTable(thetas, hits)
+    assert (np.diff(t.hit_ratios) >= -1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# workload generator calibration (the data substrate's contract)
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(["quora", "reddit", "qqp", "mrpc", "mqp"]),
+       st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_duplicate_pairs_more_similar(profile, seed):
+    wl = SyntheticWorkload(profile, dim=32, n_clusters=200, seed=seed)
+    e1, e2, dup = wl.labeled_pairs(400)
+    sims = np.sum(e1 * e2, axis=1)
+    assert np.median(sims[dup]) > np.median(sims[~dup]) + 0.05
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_embeddings_unit_norm(seed):
+    wl = SyntheticWorkload("quora", dim=24, n_clusters=50, seed=seed)
+    batch = wl.sample(100, rps=10)
+    np.testing.assert_allclose(np.linalg.norm(batch.vectors, axis=1), 1.0,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(batch.answers, axis=1), 1.0,
+                               atol=1e-5)
+
+
+@given(st.floats(0.2, 5.0))
+@settings(max_examples=15, deadline=None)
+def test_arrival_cv_matches_request(cv):
+    wl = SyntheticWorkload("quora", dim=8, n_clusters=10, seed=0)
+    arr = wl.arrivals(4000, rps=10.0, cv=cv)
+    gaps = np.diff(arr)
+    measured = gaps.std() / gaps.mean()
+    assert measured == pytest.approx(cv, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_bounded(seed, n, m):
+    import jax.numpy as jnp
+    from repro.distributed.compression import (dequantize_int8,
+                                               quantize_int8, relative_error)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = float(relative_error(x, dequantize_int8(q, s)))
+    assert err < 0.05
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_topk_sparsify_partition(seed, frac):
+    import jax.numpy as jnp
+    from repro.distributed.compression import topk_sparsify
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    kept, res = topk_sparsify(x, frac)
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(x),
+                               atol=1e-6)
+    # kept entries dominate residual entries in magnitude
+    k = np.asarray(kept)
+    r = np.asarray(res)
+    if (k != 0).any() and (r != 0).any():
+        assert np.abs(k[k != 0]).min() >= np.abs(r[r != 0]).max() - 1e-6

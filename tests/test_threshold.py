@@ -1,0 +1,90 @@
+"""Dynamic threshold adjustment: M/D/1 model, T2H table, DTA policy."""
+import numpy as np
+import pytest
+
+from repro.core.threshold import DynamicThreshold, T2HTable, mdo1_wait
+
+
+def test_mdo1_monotone_in_lambda_and_service():
+    assert mdo1_wait(1.0, 0.5) < mdo1_wait(1.5, 0.5) < mdo1_wait(1.9, 0.5)
+    assert mdo1_wait(1.0, 0.3) < mdo1_wait(1.0, 0.5)
+
+
+def test_mdo1_unstable_is_infinite():
+    assert mdo1_wait(2.0, 0.5) == float("inf")      # rho = 1
+    assert mdo1_wait(3.0, 0.5) == float("inf")
+
+
+def test_mdo1_zero_load_equals_service():
+    assert mdo1_wait(0.0, 0.7) == pytest.approx(0.7)
+
+
+def _table():
+    thetas = np.asarray([0.98, 0.92, 0.86, 0.80, 0.74, 0.68, 0.62])
+    hits = np.asarray([0.05, 0.15, 0.30, 0.45, 0.60, 0.75, 0.85])
+    return T2HTable(thetas, hits)
+
+
+def test_t2h_lookup_nearest():
+    t = _table()
+    assert t.h(0.86) == pytest.approx(0.30)
+    assert t.h(0.87) == pytest.approx(0.30)       # nearest
+    assert t.h(0.99) == pytest.approx(0.05)
+
+
+def test_dta_picks_highest_feasible_theta():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    dta.lam = 0.5
+    th_light = dta.retune()
+    dta.lam = 5.0
+    th_heavy = dta.retune()
+    assert th_heavy <= th_light        # heavier load -> lower theta
+    # and the choice is the HIGHEST theta satisfying W <= SLO
+    for th in dta.t2h.thetas:
+        if th > th_heavy:
+            assert dta.predicted_wait(float(th)) > dta.slo_latency
+
+
+def test_dta_disabled_keeps_max_theta():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9,
+                           enabled=False)
+    dta.lam = 50.0
+    assert dta.retune() == pytest.approx(0.98)
+
+
+def test_dta_feedback_shifts_operating_point():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    dta.lam = 1.0
+    th0 = dta.retune()
+    # observed waits far above prediction -> lower theta (bias up)
+    for _ in range(3):
+        dta.feedback(observed_wait=dta.predicted_wait(dta.theta) * 2.0)
+    assert dta.theta < th0
+    # observed waits far below prediction -> bias decays back
+    for _ in range(5):
+        dta.feedback(observed_wait=dta.predicted_wait(dta.theta) * 0.1)
+    assert dta.theta >= th0 - 1e-9 or dta._bias == 0
+
+
+def test_t2h_build_monotone(rng, unit_vectors):
+    """Hit ratio must be non-increasing in theta by construction."""
+    from repro.core.semantic_cache import SemanticCache
+    from repro.core.store import CentroidStore
+    d = 16
+    cache = SemanticCache(d, d, capacity=128)
+    vecs = unit_vectors(64, d)
+    st = CentroidStore(d, d)
+    st.add(vecs, vecs, np.ones(64))
+    cache.set_centroids(st)
+    sample = unit_vectors(200, d)
+    t2h = T2HTable.build(cache, sample)
+    assert (np.diff(t2h.hit_ratios) >= -1e-12).all()   # thetas descend
+    assert t2h.hit_ratios[-1] >= t2h.hit_ratios[0]
+
+
+def test_lambda_monitoring_window():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.5,
+                           lambda_window=10.0)
+    for t in np.arange(0.0, 21.0, 0.5):                # 2 rps steady
+        dta.observe_arrival(float(t))
+    assert dta.lam == pytest.approx(2.0, rel=0.3)
