@@ -27,6 +27,7 @@ BENCHES = [
     "tab12_models",         # Tables 1/2 embedder + clustering selection
     "tab4_latency",         # Table 4 latency breakdown
     "roofline_report",      # EXPERIMENTS.md §Roofline table
+    "bench_gateway",        # EXPERIMENTS.md §Gateway hot-path + e2e
 ]
 
 

@@ -1,16 +1,18 @@
-"""End-to-end serving driver: TEXT requests -> embedder -> SISO cache ->
-continuous-batching engine over a real (reduced) qwen3 model.
+"""End-to-end serving driver: TEXT requests -> ServingGateway over a real
+(reduced) qwen3 model.
 
   PYTHONPATH=src python examples/serve_with_siso.py
 
-This is the full Fig. 8 pipeline with real tensors end to end:
+This is the full Fig. 8 pipeline with real tensors end to end, now wired
+through the one-object gateway (DESIGN.md §7):
   * requests are strings, tokenized twice — hash tokens for the ALBERT
     embedder (cache key) and model tokens for the LLM;
-  * SISO answers paraphrase repeats from the cache, bypassing the engine
-    (fused admission, DESIGN.md §2);
-  * misses run through prefill + per-slot vmapped decode;
+  * the gateway embeds each batch once, runs one batched cache lookup
+    (fused admission, DESIGN.md §2), answers paraphrase repeats inline,
+    and feeds only the miss stream to prefill + per-slot vmapped decode;
   * completed answers are recorded back (answer embedding = embedder over
-    the generated tokens).
+    the generated tokens) and the Algorithm-1 refresh fires automatically
+    once enough new queries accumulate.
 """
 import time
 
@@ -22,7 +24,7 @@ from repro.core.siso import SISO, SISOConfig
 from repro.data.tokenizer import HashTokenizer
 from repro.models import embedder as E, lm
 from repro.serving.engine import ModelEngine
-from repro.serving.scheduler import ContinuousBatchScheduler, Request
+from repro.serving.gateway import GatewayRequest, ServingGateway
 
 SEED = 0
 TOPICS = {
@@ -47,20 +49,29 @@ def main() -> int:
     mparams = lm.init_params(jax.random.PRNGKey(2), mcfg)
     engine = ModelEngine(mparams, mcfg, n_slots=3, max_len=96)
 
-    def embed(texts: list[str]) -> np.ndarray:
+    def embed_texts(texts: list[str]) -> np.ndarray:
         ids, mask = tok.encode_batch(texts)
+        return np.asarray(E.encode(eparams, ecfg, ids, mask))
+
+    def embed_tokens(token_batches) -> np.ndarray:
+        """Gateway embed hook: pre-tokenized (ids, mask) rows, one batched
+        encoder call for the whole request batch."""
+        ids = np.stack([t[0] for t in token_batches])
+        mask = np.stack([t[1] for t in token_batches])
         return np.asarray(E.encode(eparams, ecfg, ids, mask))
 
     siso = SISO(SISOConfig(dim=ecfg.d_model, answer_dim=ecfg.d_model,
                            capacity=64, theta_r=0.95,
-                           dynamic_threshold=False))
+                           dynamic_threshold=False,
+                           refresh_min=16))   # small cold-start floor so a
+                                              # refresh fires within the demo
 
     def answer_embed(out_tokens: np.ndarray) -> np.ndarray:
         text = " ".join(f"t{t}" for t in out_tokens)
-        return embed([text])[0]
+        return embed_texts([text])[0]
 
-    sched = ContinuousBatchScheduler(engine, cache=siso,
-                                     answer_fn=answer_embed)
+    gw = ServingGateway(siso, engine, embed_fn=embed_tokens,
+                        answer_fn=answer_embed)
 
     # --- request stream: paraphrase-heavy, like a production log ---
     stream = []
@@ -69,23 +80,32 @@ def main() -> int:
         stream.append((topic, str(rng.choice(TOPICS[topic]))))
 
     t0 = time.time()
-    for rid, (topic, text) in enumerate(stream):
-        vec = embed([text])[0]
-        prompt = np.asarray(tok.tokenize(text)[:12], np.int32) \
-            % mcfg.vocab_size
-        sched.submit(Request(rid=rid, tokens=prompt, max_new=8, vector=vec))
-        sched.step()
-    done = sched.drain()
+    batch_size = 4
+    for base in range(0, len(stream), batch_size):
+        chunk = stream[base: base + batch_size]
+        reqs = []
+        for off, (topic, text) in enumerate(chunk):
+            rid = base + off
+            ids, mask = tok.encode_batch([text])
+            prompt = np.asarray(tok.tokenize(text)[:12], np.int32) \
+                % mcfg.vocab_size
+            reqs.append(GatewayRequest(rid=rid, model_tokens=prompt,
+                                       embed_tokens=(ids[0], mask[0]),
+                                       max_new=8))
+        gw.submit(reqs)
+    done = gw.drain()
     dt = time.time() - t0
 
-    by = {"cache": 0, "engine": 0}
-    for r in done:
-        by[r.served_by] += 1
-    print(f"served {len(done)} requests in {dt:.1f}s — "
-          f"{by['cache']} from cache, {by['engine']} through the engine")
+    rep = gw.report()
+    print(f"served {rep['completed']} requests in {dt:.1f}s — "
+          f"{rep['served_cache']} from cache, "
+          f"{rep['served_engine']} through the engine")
+    print(f"lookup latency: p50={rep['lookup']['p50_ms']:.2f}ms "
+          f"p99={rep['lookup']['p99_ms']:.2f}ms | device mirror: "
+          f"{rep['dev_rebuilds']} rebuilds, {rep['dev_row_writes']} row patches")
     print(f"cache stats: {siso.stats()}")
-    assert len(done) == len(stream)
-    assert by["cache"] > 0, "paraphrase repeats should hit the cache"
+    assert rep["completed"] == len(stream)
+    assert rep["served_cache"] > 0, "paraphrase repeats should hit the cache"
     sample = [r for r in done if r.served_by == "engine"][0]
     print(f"sample engine completion (rid={sample.rid}): {sample.out}")
     return 0

@@ -1,0 +1,37 @@
+"""Version-compat shims over moving JAX APIs.
+
+The repo targets the jax.* spellings (`jax.shard_map`,
+`jax.tree.map_with_path`, ...) but must run on older installs where those
+live under `jax.experimental.shard_map` / `jax.tree_util` with slightly
+different keyword names. Import from here instead of feature-testing jax
+at every call site.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax.tree, "map_with_path"):           # jax >= 0.4.38
+    tree_map_with_path = jax.tree.map_with_path
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:
+    tree_map_with_path = jax.tree_util.tree_map_with_path
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+def axis_size(axis_name) -> "jax.Array":
+    """Size of a mapped mesh axis (jax.lax.axis_size is newer than some
+    supported installs; psum of 1 is the portable spelling)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off (the repo's collectives
+    return identical values on every shard on purpose)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

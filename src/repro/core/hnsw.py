@@ -121,6 +121,23 @@ class HNSW:
         found = self._search_layer(q, cur, ef, 0)
         return [(i, s) for s, i in found[:k]]
 
+    def search_batch(self, queries: np.ndarray, k: int = 1,
+                     ef: int | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-1-per-query over a (B, d) batch: (sims (B,), idx (B,)).
+
+        Graph traversal is inherently sequential per query; this packs the
+        per-query results into arrays so callers get the same contract as
+        the dense/pallas backends (misses score -1)."""
+        queries = np.atleast_2d(queries)
+        sims = np.full(len(queries), -1.0, np.float32)
+        idx = np.zeros(len(queries), np.int64)
+        for b, q in enumerate(queries):
+            res = self.search(q, k=k, ef=ef)
+            if res:
+                idx[b], sims[b] = res[0]
+        return sims, idx
+
     # ----------------------------------------------------------------- insert
 
     def _insert(self, i: int) -> None:

@@ -14,6 +14,15 @@ Lookup backends:
 Entries are ordered by cluster_size (strong semantic locality first), the
 tiled analog of SISO's hot-centroids-in-upper-HNSW-levels layout — it gives
 the Pallas kernel's early-exit tiles their hit-mass skew.
+
+Device-resident hot path (DESIGN.md §4): the padded centroid/answer
+matrices live as persistent ``jax.Array``s. Offline refreshes
+(``set_centroids``) rebuild them once; online spill inserts patch single
+rows in place with a donated ``dynamic_update_slice`` instead of
+re-uploading the whole region. Threshold compare and answer gather are
+fused into the jitted top-1, so a batch lookup is one device round trip
+and the host does only O(hits) vectorized numpy bookkeeping — no per-hit
+Python loop anywhere on the serving path.
 """
 from __future__ import annotations
 
@@ -28,12 +37,67 @@ import numpy as np
 from repro.core.store import CentroidStore
 
 
-@partial(jax.jit, static_argnames=("pad",))
-def _top1(queries: jax.Array, mat: jax.Array, valid: jax.Array, pad: int):
-    sims = queries @ mat.T  # (B, pad)
+@jax.jit
+def _fused_top1(queries: jax.Array, mat: jax.Array, ans: jax.Array,
+                valid: jax.Array, aid: jax.Array, theta):
+    """Top-1 + theta compare + answer gather in one compiled program.
+
+    queries (B, D) x mat (pad, D) -> per query: best sim, its row, the hit
+    mask at theta_R, and the gathered answer/answer_id (zero / -1 on miss).
+    """
+    sims = queries @ mat.T                                   # (B, pad)
     sims = jnp.where(valid[None, :], sims, -1.0)
     idx = jnp.argmax(sims, axis=1)
-    return sims[jnp.arange(queries.shape[0]), idx], idx
+    best = jnp.take_along_axis(sims, idx[:, None], axis=1)[:, 0]
+    hit = best >= theta
+    answer = jnp.where(hit[:, None], ans[idx], 0.0)
+    answer_id = jnp.where(hit, aid[idx], -1)
+    return hit, best, idx.astype(jnp.int32), answer, answer_id
+
+
+@jax.jit
+def _gather_hits(ans: jax.Array, aid: jax.Array, idx: jax.Array,
+                 hit: jax.Array):
+    """Answer gather for backends that produce (idx, hit) themselves."""
+    safe = jnp.maximum(idx, 0)
+    answer = jnp.where(hit[:, None], ans[safe], 0.0)
+    answer_id = jnp.where(hit, aid[safe], -1)
+    return answer, answer_id
+
+
+def _write_row_impl(mat, ans, valid, aid, row, vec, answer, answer_id):
+    mat = jax.lax.dynamic_update_slice(mat, vec[None, :], (row, 0))
+    ans = jax.lax.dynamic_update_slice(ans, answer[None, :], (row, 0))
+    valid = valid.at[row].set(True)
+    aid = aid.at[row].set(answer_id)
+    return mat, ans, valid, aid
+
+
+# Donation makes the row patch a true in-place update on TPU/GPU; the CPU
+# runtime ignores donation (with a warning), so only donate off-CPU.
+_write_row_donated = jax.jit(_write_row_impl, donate_argnums=(0, 1, 2, 3))
+_write_row_plain = jax.jit(_write_row_impl)
+
+
+@dataclass
+class _DeviceState:
+    """Persistent device-resident mirror of centroid + spill regions."""
+    mat: jax.Array      # (pad, dim) float32
+    ans: jax.Array      # (pad, answer_dim) float32
+    valid: jax.Array    # (pad,) bool
+    aid: jax.Array      # (pad,) int32
+    pad: int
+
+    def write_row(self, row: int, vec: np.ndarray, answer: np.ndarray,
+                  answer_id: int) -> None:
+        fn = _write_row_plain if jax.default_backend() == "cpu" \
+            else _write_row_donated
+        # jnp.array (copy) — asarray would zero-copy-alias caller numpy
+        # buffers that may be mutated while the async write is in flight
+        self.mat, self.ans, self.valid, self.aid = fn(
+            self.mat, self.ans, self.valid, self.aid,
+            jnp.int32(row), jnp.array(vec, jnp.float32),
+            jnp.array(answer, jnp.float32), jnp.int32(answer_id))
 
 
 @dataclass
@@ -58,11 +122,14 @@ class SemanticCache:
         self.spill = CentroidStore(dim, answer_dim)
         self._spill_clock = 0
         self._spill_last_use: np.ndarray = np.zeros((0,), np.int64)
-        self._pad_mat: Optional[jax.Array] = None
-        self._pad_valid: Optional[jax.Array] = None
+        self._dev: Optional[_DeviceState] = None
         self._hnsw = None
         self.hits = 0
         self.misses = 0
+        # observability: how many times the device mirror was rebuilt from
+        # scratch vs patched in place (bench_gateway reads these)
+        self.dev_rebuilds = 0
+        self.dev_row_writes = 0
 
     # ----------------------------------------------------------------- state
 
@@ -87,36 +154,47 @@ class SemanticCache:
         """Progressive update entry point (CacheManager.update_chunks)."""
         if first:
             self._staging = CentroidStore(self.dim, self.answer_dim)
-        for i in range(len(chunk)):
-            self._staging.add(chunk.vectors[i], chunk.answers[i],
-                              chunk.cluster_size[i], chunk.access_count[i],
-                              chunk.answer_id[i])
+        self._staging.add(chunk.vectors, chunk.answers, chunk.cluster_size,
+                          chunk.access_count, chunk.answer_id)
 
     def finish_update(self) -> None:
         self.set_centroids(self._staging)
         del self._staging
 
     def _invalidate(self):
-        self._pad_mat = None
+        """Full invalidation: only the offline refresh path (centroid set
+        replaced) and state restore call this. Online spill inserts patch
+        the device mirror in place instead."""
+        self._dev = None
         self._hnsw = None
 
-    # ---------------------------------------------------------------- lookup
+    # ---------------------------------------------------------------- device
 
-    def _matrix(self) -> tuple[jax.Array, jax.Array, int]:
-        if self._pad_mat is None:
-            n = len(self.centroids) + len(self.spill)
+    def _device_state(self) -> _DeviceState:
+        if self._dev is None:
+            nc = len(self.centroids)
+            n = nc + len(self.spill)
             pad = max(128, 1 << (n - 1).bit_length()) if n else 128
             mat = np.zeros((pad, self.dim), np.float32)
-            if len(self.centroids):
-                mat[: len(self.centroids)] = self.centroids.vectors
-            if len(self.spill):
-                mat[len(self.centroids): n] = self.spill.vectors
+            ans = np.zeros((pad, self.answer_dim), np.float32)
             valid = np.zeros((pad,), bool)
+            aid = np.full((pad,), -1, np.int32)
+            if nc:
+                mat[:nc] = self.centroids.vectors
+                ans[:nc] = self.centroids.answers
+                aid[:nc] = self.centroids.answer_id
+            if len(self.spill):
+                mat[nc:n] = self.spill.vectors
+                ans[nc:n] = self.spill.answers
+                aid[nc:n] = self.spill.answer_id
             valid[:n] = True
-            self._pad_mat = jnp.asarray(mat)
-            self._pad_valid = jnp.asarray(valid)
-            self._pad = pad
-        return self._pad_mat, self._pad_valid, self._pad
+            self._dev = _DeviceState(jnp.asarray(mat), jnp.asarray(ans),
+                                     jnp.asarray(valid), jnp.asarray(aid),
+                                     pad)
+            self.dev_rebuilds += 1
+        return self._dev
+
+    # ---------------------------------------------------------------- lookup
 
     def lookup(self, queries: np.ndarray, theta_r: float,
                update_counts: bool = True) -> LookupResult:
@@ -125,7 +203,8 @@ class SemanticCache:
         nc = len(self.centroids)
         n = nc + len(self.spill)
         if n == 0:
-            self.misses += B
+            if update_counts:
+                self.misses += B
             return LookupResult(np.zeros(B, bool), np.full(B, -1.0, np.float32),
                                 np.zeros((B, self.answer_dim), np.float32),
                                 np.full(B, -1, np.int64),
@@ -133,40 +212,66 @@ class SemanticCache:
                                 np.full(B, -1, np.int8))
         if self.backend == "hnsw":
             sims, idx = self._hnsw_lookup(queries)
+            hit = sims >= theta_r
+            answer, answer_id = self._host_gather(hit, idx, nc, B)
         elif self.backend == "pallas":
             from repro.kernels.cosine_topk import ops as ctk_ops
-            mat, valid, _ = self._matrix()
-            s, i = ctk_ops.cosine_topk(jnp.asarray(queries), mat, k=1,
-                                       valid=valid)
-            sims, idx = np.asarray(s[:, 0]), np.asarray(i[:, 0])
+            dev = self._device_state()
+            # early-accept only for real serving thresholds: probe lookups
+            # (T2HTable.build passes theta_r=-1.0) need exact top-1 sims,
+            # and with theta <= 0 every row clears the bar after tile 0.
+            s, i, h = ctk_ops.cosine_topk(
+                jnp.asarray(queries), dev.mat, k=1,
+                valid=dev.valid, theta=theta_r,
+                early_exit=bool(theta_r > 0), return_hit=True)
+            a, ai = _gather_hits(dev.ans, dev.aid, i[:, 0], h)
+            sims, idx, hit, answer, answer_id = (
+                np.array(x) for x in jax.device_get((s[:, 0], i[:, 0], h,
+                                                     a, ai)))
+            answer_id = answer_id.astype(np.int64)
         else:
-            mat, valid, pad = self._matrix()
-            s, i = _top1(jnp.asarray(queries), mat, valid, pad)
-            sims, idx = np.asarray(s), np.asarray(i)
-        hit = sims >= theta_r
+            dev = self._device_state()
+            h, s, i, a, ai = _fused_top1(jnp.asarray(queries), dev.mat,
+                                         dev.ans, dev.valid, dev.aid,
+                                         theta_r)
+            hit, sims, idx, answer, answer_id = (
+                np.array(x) for x in jax.device_get((h, s, i, a, ai)))
+            answer_id = answer_id.astype(np.int64)
+        idx = np.asarray(idx, np.int64)
         region = np.where(~hit, -1, np.where(idx < nc, 0, 1)).astype(np.int8)
-        answer = np.zeros((B, self.answer_dim), np.float32)
-        answer_id = np.full(B, -1, np.int64)
-        for b in np.where(hit)[0]:
-            j = int(idx[b])
-            if j < nc:
-                answer[b] = self.centroids.answers[j]
-                answer_id[b] = self.centroids.answer_id[j]
-                if update_counts:
-                    self.centroids.access_count[j] += 1
-            else:
-                sj = j - nc
-                answer[b] = self.spill.answers[sj]
-                answer_id[b] = self.spill.answer_id[sj]
-                if update_counts:
-                    self._spill_clock += 1
-                    self._spill_last_use[sj] = self._spill_clock
-        if update_counts:   # T2H probe lookups must not skew serving stats
+        if update_counts:
+            # batched bookkeeping — O(hits) numpy, no Python loop
+            cent_rows = idx[hit & (idx < nc)]
+            if len(cent_rows):
+                np.add.at(self.centroids.access_count, cent_rows, 1.0)
+            spill_rows = idx[hit & (idx >= nc)] - nc
+            if len(spill_rows):
+                # per-hit clock ticks in batch order (duplicates keep the
+                # latest tick, same as the sequential loop would)
+                self._spill_last_use[spill_rows] = \
+                    self._spill_clock + 1 + np.arange(len(spill_rows))
+                self._spill_clock += len(spill_rows)
             self.hits += int(hit.sum())
             self.misses += int(B - hit.sum())
         entry = np.where(hit, idx, -1).astype(np.int64)
         return LookupResult(hit, sims.astype(np.float32), answer, answer_id,
                             entry, region)
+
+    def _host_gather(self, hit: np.ndarray, idx: np.ndarray, nc: int,
+                     B: int) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized host-side answer gather (hnsw backend only)."""
+        answer = np.zeros((B, self.answer_dim), np.float32)
+        answer_id = np.full(B, -1, np.int64)
+        hc = hit & (idx < nc)
+        hs = hit & (idx >= nc)
+        if hc.any():
+            answer[hc] = self.centroids.answers[idx[hc]]
+            answer_id[hc] = self.centroids.answer_id[idx[hc]]
+        if hs.any():
+            sj = idx[hs] - nc
+            answer[hs] = self.spill.answers[sj]
+            answer_id[hs] = self.spill.answer_id[sj]
+        return answer, answer_id
 
     def _hnsw_lookup(self, queries: np.ndarray):
         from repro.core.hnsw import HNSW
@@ -177,33 +282,39 @@ class SemanticCache:
                                    np.zeros(len(self.spill))]) \
                 if len(self.spill) else self.centroids.cluster_size
             self._hnsw = HNSW.build(vecs, locality=size)
-        sims = np.full(len(queries), -1.0, np.float32)
-        idx = np.zeros(len(queries), np.int64)
-        for b, q in enumerate(queries):
-            res = self._hnsw.search(q, k=1)
-            if res:
-                idx[b], sims[b] = res[0]
-        return sims, idx
+        return self._hnsw.search_batch(queries, k=1)
 
     # ----------------------------------------------------------------- spill
 
     def insert_spill(self, vector: np.ndarray, answer: np.ndarray,
                      answer_id: int = -1) -> None:
-        """LRU insert of an individual query vector into free space."""
+        """LRU insert of an individual query vector into free space.
+
+        The device mirror is patched in place (one donated row write); a
+        full rebuild only happens when the padded matrix must grow, which
+        pow2 sizing makes O(log capacity) times over the cache lifetime.
+        """
         if not self.spill_lru or self.spill_capacity == 0:
             return
+        nc = len(self.centroids)
         self._spill_clock += 1
         if len(self.spill) >= self.spill_capacity:
             victim = int(np.argmin(self._spill_last_use))
-            self.spill.vectors[victim] = vector
-            self.spill.answers[victim] = answer
-            self.spill.answer_id[victim] = answer_id
+            self.spill.set_row(victim, vector, answer, answer_id)
             self._spill_last_use[victim] = self._spill_clock
+            row = nc + victim
         else:
             self.spill.add(vector, answer, 1.0, answer_id=answer_id)
             self._spill_last_use = np.append(self._spill_last_use,
                                              self._spill_clock)
-        self._invalidate()
+            row = nc + len(self.spill) - 1
+        if self._dev is not None:
+            if row < self._dev.pad:
+                self._dev.write_row(row, vector, answer, answer_id)
+                self.dev_row_writes += 1
+            else:               # outgrew the padding: rebuild (pow2 growth)
+                self._dev = None
+        self._hnsw = None       # graph path stays rebuild-based
 
     # --------------------------------------------------------------- metrics
 

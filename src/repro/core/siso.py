@@ -35,6 +35,9 @@ class SISOConfig:
     repeat_window: float = 60.0      # seconds
     t2h_sample_frac: float = 0.05    # paper: 5% of fresh queries
     refresh_frac: float = 0.10       # re-cluster at +10% new queries (§4.1)
+    refresh_min: int = 32            # cold-start floor: an un-bootstrapped
+                                     # system batches this much history
+                                     # before its first clustering
 
 
 class SISO:
@@ -65,18 +68,29 @@ class SISO:
     def handle_batch(self, vectors: np.ndarray, now: float = 0.0,
                      user_ids: Optional[np.ndarray] = None) -> LookupResult:
         """Lookup a batch of query embeddings. Repeated queries from the
-        same user are forced to miss (routed to the LLM)."""
+        same user are forced to miss (routed to the LLM). Negative user
+        ids mark anonymous requests: no repeat tracking, no state kept."""
         vectors = np.atleast_2d(vectors)
-        for _ in vectors:
-            self.threshold.observe_arrival(now)
+        self.threshold.observe_arrivals(now, len(vectors))
         res = self.cache.lookup(vectors, self.theta_r)
         if user_ids is not None:
             for b, u in enumerate(user_ids):
+                if int(u) < 0:
+                    continue
                 prev = self._user_last.get(int(u))
                 if (prev is not None and now - prev[1] <= self.cfg.repeat_window
                         and float(vectors[b] @ prev[0]) >= self.cfg.repeat_sim
                         and res.hit[b]):
-                    res.hit[b] = False          # dissatisfied-user escape
+                    # dissatisfied-user escape: the request is engine-served,
+                    # so also undo the phantom hit's serving stats and
+                    # popularity bump (else hit_ratio overstates the real
+                    # served-from-cache fraction under repeat-heavy streams)
+                    if res.region[b] == 0:
+                        self.cache.centroids.access_count[
+                            int(res.entry[b])] -= 1.0
+                    self.cache.hits -= 1
+                    self.cache.misses += 1
+                    res.hit[b] = False
                     res.region[b] = -1
                     res.entry[b] = -1
                 self._user_last[int(u)] = (vectors[b], now)
@@ -91,8 +105,12 @@ class SISO:
         self.cache.insert_spill(vector, answer, answer_id)
 
     def needs_refresh(self) -> bool:
-        base = max(self._initial_log_size, 1)
-        return len(self._log_vecs) >= self.cfg.refresh_frac * base
+        if self._initial_log_size == 0:
+            # never bootstrapped: +10% of an empty history would refresh on
+            # every recorded miss (and rebuild the device mirror each time)
+            return len(self._log_vecs) >= self.cfg.refresh_min
+        return len(self._log_vecs) \
+            >= self.cfg.refresh_frac * self._initial_log_size
 
     # ---------------------------------------------------------------- offline
 

@@ -65,6 +65,12 @@ class CentroidStore:
         self.ids = np.concatenate([self.ids, new_ids])
         return new_ids
 
+    def set_row(self, i: int, vector, answer, answer_id: int = -1) -> None:
+        """Overwrite row i in place (LRU replacement); keeps the stable id."""
+        self.vectors[i] = np.asarray(vector, np.float32)
+        self.answers[i] = np.asarray(answer, np.float32)
+        self.answer_id[i] = answer_id
+
     def take(self, keep: np.ndarray) -> None:
         """Keep rows selected by index array / bool mask (in-place)."""
         self.vectors = self.vectors[keep]

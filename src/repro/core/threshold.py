@@ -62,7 +62,12 @@ class DynamicThreshold:
     _bias: int = 0                # feedback correction in table steps
 
     def observe_arrival(self, t: float) -> None:
-        self._arrivals.append(t)
+        self.observe_arrivals(t, 1)
+
+    def observe_arrivals(self, t: float, n: int) -> None:
+        """Batched arrival accounting: a size-n batch at time t counts n
+        arrivals toward lambda without a per-request Python call."""
+        self._arrivals.extend([t] * n)
         if t - self._last_refresh >= self.lambda_window:
             horizon = t - self.lambda_window
             self._arrivals = [a for a in self._arrivals if a >= horizon]

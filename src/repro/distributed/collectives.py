@@ -53,8 +53,9 @@ def sharded_topk(queries: jax.Array, centroids: jax.Array, k: int,
 
     spec_q = P()                      # queries replicated over the axis
     spec_c = P(axis, None)
-    fn = jax.shard_map(kern, mesh=mesh, in_specs=(spec_q, spec_c),
-                       out_specs=(P(), P()), check_vma=False)
+    from repro.compat import shard_map
+    fn = shard_map(kern, mesh=mesh, in_specs=(spec_q, spec_c),
+                   out_specs=(P(), P()))
     return fn(queries, centroids)
 
 
@@ -62,7 +63,8 @@ def ring_allreduce_schedule(x: jax.Array, axis: str) -> jax.Array:
     """Reduce-scatter + all-gather ring via collective_permute (inside
     shard_map). Equivalent to psum; exists so the schedule is explicit and
     each hop can be interleaved with compute by the caller."""
-    world = jax.lax.axis_size(axis)
+    from repro.compat import axis_size
+    world = axis_size(axis)
     if world == 1:
         return x
     perm = [(i, (i + 1) % world) for i in range(world)]

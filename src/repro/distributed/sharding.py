@@ -89,7 +89,8 @@ def param_spec(path, leaf, cfg: ModelConfig, fsdp: bool,
 
 def param_specs(params, cfg: ModelConfig, fsdp: bool,
                 expert_data: bool = False, fsdp_axes: tuple = ("data",)):
-    return jax.tree.map_with_path(
+    from repro.compat import tree_map_with_path
+    return tree_map_with_path(
         lambda path, leaf: param_spec(path, leaf, cfg, fsdp, expert_data,
                                       fsdp_axes),
         params)

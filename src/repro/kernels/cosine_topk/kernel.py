@@ -47,15 +47,24 @@ def _merge_topk(run_vals, run_idx, sims, idx, k: int):
 
 
 def cosine_topk_kernel(theta_ref, q_ref, c_ref, valid_ref, vals_ref, idx_ref,
-                       *, k: int, block_n: int, early_exit: bool):
+                       hit_ref, *, k: int, block_n: int, early_exit: bool):
     """Grid: (num_centroid_tiles,). q block (B, D) constant; c tile
-    (block_n, D) streams; vals/idx (B, k) revisited accumulators."""
+    (block_n, D) streams; vals/idx/hit (B, k)/(B, k)/(B, 1) revisited
+    accumulators.
+
+    The hit mask is the theta_R early-accept (DESIGN.md §4): per query,
+    ``best similarity >= theta`` the moment the tile that produced the best
+    is merged — the serving cache reads it directly instead of re-comparing
+    on the host. theta=2.0 (unreachable) keeps the mask all-false and
+    degrades to plain exact top-k.
+    """
     t = pl.program_id(0)
 
     @pl.when(t == 0)
     def _init():
         vals_ref[...] = jnp.full(vals_ref.shape, NEG, jnp.float32)
         idx_ref[...] = jnp.full(idx_ref.shape, -1, jnp.int32)
+        hit_ref[...] = jnp.zeros(hit_ref.shape, jnp.int32)
 
     def _compute():
         q = q_ref[...]
@@ -70,10 +79,12 @@ def cosine_topk_kernel(theta_ref, q_ref, c_ref, valid_ref, vals_ref, idx_ref,
         rv, ri = _merge_topk(vals_ref[...], idx_ref[...], sims, gcol, k)
         vals_ref[...] = rv
         idx_ref[...] = ri
+        hit_ref[...] = (rv[:, :1] >= theta_ref[0]).astype(jnp.int32)
 
     if early_exit:
         # worst (over queries) current-best similarity already >= theta:
-        # every query has a serviceable hit -> skip this tile's matmul.
+        # every query has a serviceable hit -> skip this tile's matmul
+        # (the hit mask is already all-ones and stays valid).
         done = jnp.logical_and(t > 0,
                                jnp.min(vals_ref[:, 0]) >= theta_ref[0])
 

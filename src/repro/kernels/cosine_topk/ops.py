@@ -21,28 +21,38 @@ def _ceil_to(x: int, m: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret",
-                                             "early_exit"))
+                                             "early_exit", "return_hit"))
 def cosine_topk(queries: jax.Array, centroids: jax.Array, k: int = 1,
                 valid: jax.Array | None = None,
                 theta: float | jax.Array = 2.0,
                 block_n: int = 512, interpret: bool | None = None,
-                early_exit: bool = False) -> tuple[jax.Array, jax.Array]:
+                early_exit: bool = False, return_hit: bool = False):
     """queries (B, D) x centroids (N, D) -> (sims (B, k) f32, idx (B, k) i32).
 
     valid: (N,) bool/int — rows to consider (default all). theta=2.0 (never
     reached) disables early exit even when compiled with early_exit=True.
+    With ``return_hit`` a third output (B,) bool is appended: the kernel's
+    theta_R early-accept mask (best sim >= theta), so the serving cache gets
+    hit decisions straight off the device with no host re-compare.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, D = queries.shape
     N = centroids.shape[0]
+    if B == 0:
+        empty = (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
+        return (*empty, jnp.zeros((0,), bool)) if return_hit else empty
     # --- padding: D to lane width, N to tile, B to sublane count ---
     Dp = _ceil_to(max(D, 1), 128)
     Bp = _ceil_to(max(B, 1), 8)
     block_n = min(block_n, _ceil_to(max(N, 1), 128))
     Np = _ceil_to(max(N, 1), block_n)
-    q = jnp.zeros((Bp, Dp), jnp.float32).at[:B, :D].set(
-        queries.astype(jnp.float32))
+    # pad query rows by repeating the last real row (not zeros): padded rows
+    # then track a real query, so the all-queries early-exit min is never
+    # held back by padding that can't clear theta.
+    rows = jnp.minimum(jnp.arange(Bp), B - 1)
+    q = jnp.zeros((Bp, Dp), jnp.float32).at[:, :D].set(
+        queries.astype(jnp.float32)[rows])
     c = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(
         centroids.astype(jnp.float32))
     v = (jnp.ones((N,), jnp.int32) if valid is None
@@ -53,7 +63,7 @@ def cosine_topk(queries: jax.Array, centroids: jax.Array, k: int = 1,
     grid = (Np // block_n,)
     kern = functools.partial(cosine_topk_kernel, k=k, block_n=block_n,
                              early_exit=early_exit)
-    vals, idx = pl.pallas_call(
+    vals, idx, hit = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -66,14 +76,18 @@ def cosine_topk(queries: jax.Array, centroids: jax.Array, k: int = 1,
             out_specs=[
                 pl.BlockSpec((Bp, k), lambda t, *_: (0, 0)),
                 pl.BlockSpec((Bp, k), lambda t, *_: (0, 0)),
+                pl.BlockSpec((Bp, 1), lambda t, *_: (0, 0)),
             ],
         ),
         out_shape=[
             jax.ShapeDtypeStruct((Bp, k), jnp.float32),
             jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
         ],
         interpret=interpret,
     )(theta_arr, q, c, v)
     vals, idx = vals[:B], idx[:B]
     idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    if return_hit:
+        return vals, idx, hit[:B, 0].astype(bool)
     return vals, idx

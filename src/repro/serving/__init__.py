@@ -1,1 +1,5 @@
-"""Serving layer: engines, continuous batching, SLO simulator, baselines."""
+"""Serving layer: engines, continuous batching, gateway, SLO simulator."""
+from repro.serving.gateway import (GatewayRequest, GatewayStats,
+                                   ServingGateway)
+
+__all__ = ["GatewayRequest", "GatewayStats", "ServingGateway"]

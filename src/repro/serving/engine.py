@@ -183,10 +183,17 @@ class ModelEngine:
 
     def decode_active(self, tokens: np.ndarray) -> np.ndarray:
         """One decode step for every slot (inactive slots decode garbage
-        that callers ignore). tokens: (n_slots,) last token per slot."""
+        that callers ignore). tokens: (n_slots,) last token per slot.
+
+        tokens/pos MUST be copied onto the device (jnp.array, not
+        jnp.asarray): on CPU, asarray zero-copy-aliases the caller's
+        numpy buffers, and both are mutated immediately after dispatch
+        (pos below, tokens by the scheduler's retire loop) while the
+        async computation may still be reading them — a data race that
+        surfaced as run-to-run nondeterministic decode output."""
         logits, self.cache = self._jit_decode(
-            self.params, jnp.asarray(tokens, jnp.int32)[:, None],
-            self.cache, jnp.asarray(self.pos))
+            self.params, jnp.array(tokens, jnp.int32)[:, None],
+            self.cache, jnp.array(self.pos))
         self.pos[self.active] += 1
         return np.asarray(jnp.argmax(logits, axis=-1))
 

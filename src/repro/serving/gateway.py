@@ -1,0 +1,175 @@
+"""SISO serving gateway — the end-to-end online pipeline (DESIGN.md §7).
+
+One object owns the whole request path the paper's Fig. 8 sketches and the
+examples used to hand-wire:
+
+    raw token batch
+      --embed (batched)--> query vectors
+      --SISO.handle_batch--> batched cache lookup @ dynamic theta_R
+                            (+ repeated-query escape hatch)
+      --hit--> answered inline, never touches an engine slot
+      --miss--> ContinuousBatchScheduler -> ModelEngine decode slots
+      --completion--> record_llm_answer (spill insert + offline log)
+      --every +refresh_frac new queries--> Algorithm-1 refresh
+
+The gateway is deliberately thin: SISO owns cache policy, the scheduler
+owns slot management, and this class owns only batching, wiring, and
+serving metrics (per-batch lookup latency percentiles, hit/miss split,
+refresh cadence).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.siso import SISO
+from repro.serving.engine import ModelEngine
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
+
+
+@dataclass
+class GatewayRequest:
+    """A raw serving request: model tokens for the engine, embed tokens for
+    the cache key (defaults to the model tokens)."""
+    rid: int
+    model_tokens: np.ndarray
+    embed_tokens: Optional[np.ndarray] = None
+    user_id: Optional[int] = None
+    max_new: int = 32
+    eos_id: int = -1
+
+
+# per-batch samples kept for percentile reporting; bounded because the
+# gateway is a long-lived serving object (percentiles describe the recent
+# window, not lifetime aggregates)
+STATS_WINDOW = 4096
+
+
+@dataclass
+class GatewayStats:
+    submitted: int = 0
+    refreshes: int = 0
+    lookup_s: deque = field(default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    batch_sizes: deque = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+
+    def lookup_percentiles(self) -> dict:
+        if not self.lookup_s:
+            return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+        a = np.asarray(self.lookup_s) * 1e3
+        return {"p50_ms": float(np.percentile(a, 50)),
+                "p99_ms": float(np.percentile(a, 99)),
+                "mean_ms": float(a.mean())}
+
+
+class ServingGateway:
+    """Batched online serving over a SISO cache + continuous-batching engine.
+
+    embed_fn: list of embed-token arrays -> (B, dim) float32 query vectors
+              (one batched call per submitted batch — the embedder is part
+              of the hot path and must not be invoked per request).
+    answer_fn: generated token array -> answer embedding, used to record
+              engine completions back into the cache; None disables
+              recording (pure read-only cache).
+    """
+
+    def __init__(self, siso: SISO, engine: ModelEngine,
+                 embed_fn: Callable[[Sequence[np.ndarray]], np.ndarray],
+                 answer_fn: Optional[Callable] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 auto_refresh: bool = True):
+        self.siso = siso
+        self.engine = engine
+        self.embed_fn = embed_fn
+        self.auto_refresh = auto_refresh
+        self.clock = clock or time.perf_counter
+        self.sched = ContinuousBatchScheduler(engine, cache=siso,
+                                              answer_fn=answer_fn,
+                                              clock=self.clock)
+        self.stats = GatewayStats()
+
+    # ------------------------------------------------------------------ api
+
+    def submit(self, batch: Sequence[GatewayRequest],
+               now: Optional[float] = None) -> np.ndarray:
+        """One pipeline pass over a request batch. Hits are answered inline;
+        misses enter the engine queue. Returns the (B,) hit mask."""
+        if not len(batch):
+            return np.zeros(0, bool)
+        now = self.clock() if now is None else now
+        missing = [r.embed_tokens is None for r in batch]
+        if any(missing) and not all(missing):
+            # a mixed batch would hand embed_fn a heterogeneous list
+            # (embed keys + raw model tokens) and mis-embed silently
+            raise ValueError("mixed batch: every request must either set "
+                             "embed_tokens or leave it unset (falls back "
+                             "to model_tokens for the whole batch)")
+        embed_toks = [r.embed_tokens if r.embed_tokens is not None
+                      else r.model_tokens for r in batch]
+        vectors = np.asarray(self.embed_fn(embed_toks), np.float32)
+        user_ids = None
+        if any(r.user_id is not None for r in batch):
+            # anonymous rows get the -1 sentinel: SISO skips repeat
+            # tracking for them and keeps no per-request state
+            user_ids = np.asarray([-1 if r.user_id is None else r.user_id
+                                   for r in batch])
+        t0 = time.perf_counter()
+        res = self.siso.handle_batch(vectors, now=now, user_ids=user_ids)
+        self.stats.lookup_s.append(time.perf_counter() - t0)
+        self.stats.batch_sizes.append(len(batch))
+        self.stats.submitted += len(batch)
+        for b, r in enumerate(batch):
+            req = Request(rid=r.rid, tokens=np.asarray(r.model_tokens),
+                          max_new=r.max_new, eos_id=r.eos_id,
+                          vector=vectors[b])
+            if res.hit[b]:
+                self.sched.admit_resolved(req, res.answer[b])
+            else:
+                self.sched.enqueue(req)
+        self.sched.step()
+        self._maybe_refresh()
+        return res.hit
+
+    def step(self) -> int:
+        """One engine tick (admit -> prefill -> batched decode -> retire)."""
+        return self.sched.step()
+
+    def drain(self, max_ticks: int = 10_000) -> list[Request]:
+        """Run the engine until every queued miss has completed; returns all
+        finished requests (cache hits included), then refreshes if due.
+        Per-path serving counts live in report(), derived from done."""
+        out = self.sched.drain(max_ticks)
+        self._maybe_refresh()
+        return out
+
+    @property
+    def done(self) -> list[Request]:
+        return self.sched.done
+
+    # ------------------------------------------------------------- internal
+
+    def _maybe_refresh(self) -> None:
+        if self.auto_refresh and self.siso.needs_refresh():
+            self.siso.refresh()
+            self.stats.refreshes += 1
+
+    # --------------------------------------------------------------- report
+
+    def report(self) -> dict:
+        s = self.siso.stats()
+        done = self.sched.done
+        return {
+            **s,
+            "submitted": self.stats.submitted,
+            "completed": len(done),
+            "served_cache": sum(r.served_by == "cache" for r in done),
+            "served_engine": sum(r.served_by == "engine" for r in done),
+            "refreshes": self.stats.refreshes,
+            "lookup": self.stats.lookup_percentiles(),
+            "dev_rebuilds": self.siso.cache.dev_rebuilds,
+            "dev_row_writes": self.siso.cache.dev_row_writes,
+        }

@@ -67,6 +67,20 @@ class ContinuousBatchScheduler:
                 return
         self.queue.append(req)
 
+    def enqueue(self, req: Request) -> None:
+        """Admission already resolved upstream (the gateway's batched
+        lookup): queue straight for an engine slot, no per-request
+        cache probe. Completed requests still record back via _record."""
+        req.t_submit = self.clock()
+        self.queue.append(req)
+
+    def admit_resolved(self, req: Request, answer: np.ndarray) -> None:
+        """Upstream batched lookup hit: answer inline, never touch a slot."""
+        req.served_by = "cache"
+        req.answer = answer
+        req.t_submit = req.t_first = req.t_done = self.clock()
+        self.done.append(req)
+
     def step(self) -> int:
         """One scheduler tick: admit -> prefill -> batched decode -> retire.
         Returns number of active slots after the tick."""

@@ -1,0 +1,266 @@
+"""ServingGateway end-to-end + device-resident cache + backend parity."""
+import numpy as np
+import pytest
+
+from repro.core.semantic_cache import SemanticCache
+from repro.core.siso import SISO, SISOConfig
+from repro.core.store import CentroidStore
+
+
+def _unit(rng, n, d=16):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _store(vectors, sizes, d):
+    st = CentroidStore(d, d)
+    st.add(vectors, vectors, sizes, answer_id=np.arange(len(vectors)))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# backend parity: dense / pallas / hnsw agree on hit masks
+# ---------------------------------------------------------------------------
+
+
+def test_backend_hit_mask_parity(rng):
+    d = 32
+    base = _unit(rng, 40, d)
+    store = _store(base, np.arange(40, 0, -1).astype(np.float64), d)
+    # hits: tight paraphrases (sim ~0.99); misses: fresh directions
+    # (max sim over 40 random 32-d centroids stays far below theta=0.8)
+    hits = base[:10] + 0.02 * rng.normal(size=(10, d)).astype(np.float32)
+    hits /= np.linalg.norm(hits, axis=1, keepdims=True)
+    misses = _unit(rng, 10, d)
+    queries = np.concatenate([hits, misses])
+    theta = 0.8
+    results = {}
+    for backend in ("dense", "pallas", "hnsw"):
+        cache = SemanticCache(d, d, capacity=64, backend=backend)
+        cache.set_centroids(store)
+        results[backend] = cache.lookup(queries, theta_r=theta,
+                                        update_counts=False)
+    ref = results["dense"]
+    assert ref.hit[:10].all() and not ref.hit[10:].any()
+    for backend in ("pallas", "hnsw"):
+        res = results[backend]
+        np.testing.assert_array_equal(res.hit, ref.hit, err_msg=backend)
+        np.testing.assert_array_equal(res.answer_id, ref.answer_id,
+                                      err_msg=backend)
+        np.testing.assert_allclose(res.answer, ref.answer, atol=1e-5,
+                                   err_msg=backend)
+    # dense vs pallas are both exact top-1: sims must agree tightly
+    np.testing.assert_allclose(results["pallas"].sim, ref.sim, atol=3e-6)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas", "hnsw"])
+def test_empty_query_batch(rng, backend):
+    d = 16
+    cache = SemanticCache(d, d, capacity=64, backend=backend)
+    cache.set_centroids(_store(_unit(rng, 8, d), np.ones(8), d))
+    res = cache.lookup(np.zeros((0, d), np.float32), theta_r=0.9)
+    assert res.hit.shape == (0,) and res.answer.shape == (0, d)
+    assert cache.hits == 0 and cache.misses == 0
+
+
+def test_pallas_probe_lookup_exact_past_first_tile(rng):
+    """T2H probes (theta_r=-1) must see true top-1 sims: the early-accept
+    must not fire at theta<=0 and hide matches beyond the first kernel
+    tile (block_n=512)."""
+    d = 16
+    base = _unit(rng, 700, d)
+    store = _store(base, np.ones(700), d)
+    cache = SemanticCache(d, d, capacity=1024, backend="pallas")
+    cache.set_centroids(store)
+    # exact copies of entries that live in the second tile
+    probes = cache.centroids.vectors[600:605].copy()
+    res = cache.lookup(probes, theta_r=-1.0, update_counts=False)
+    np.testing.assert_allclose(res.sim, 1.0, atol=1e-5)
+
+
+def test_pallas_hit_mask_comes_from_kernel():
+    """The kernel's theta early-accept mask equals a host re-compare."""
+    import jax.numpy as jnp
+    from repro.kernels.cosine_topk.ops import cosine_topk
+    rng = np.random.default_rng(3)
+    q = _unit(rng, 8, 64)
+    c = _unit(rng, 300, 64)
+    v, i, h = cosine_topk(jnp.asarray(q), jnp.asarray(c), k=1, theta=0.5,
+                          return_hit=True)
+    np.testing.assert_array_equal(np.asarray(h),
+                                  np.asarray(v)[:, 0] >= 0.5)
+
+
+# ---------------------------------------------------------------------------
+# device-resident hot path: in-place patches instead of rebuilds
+# ---------------------------------------------------------------------------
+
+
+def test_insert_spill_patches_device_mirror(rng):
+    d = 16
+    cache = SemanticCache(d, d, capacity=128, backend="dense")
+    base = _unit(rng, 20, d)
+    cache.set_centroids(_store(base, np.ones(20), d))
+    cache.lookup(base[:1], theta_r=0.9)            # builds the mirror
+    assert cache.dev_rebuilds == 1
+    fresh = _unit(rng, 30, d)
+    for k, v in enumerate(fresh):
+        cache.insert_spill(v, v, answer_id=100 + k)
+        res = cache.lookup(v[None], theta_r=0.99)
+        assert res.hit[0] and res.answer_id[0] == 100 + k
+        np.testing.assert_allclose(res.answer[0], v, atol=1e-6)
+    # every insert was an in-place row write — the mirror never rebuilt
+    assert cache.dev_rebuilds == 1
+    assert cache.dev_row_writes == 30
+
+
+def test_spill_lru_replacement_patches_in_place(rng):
+    d = 16
+    cache = SemanticCache(d, d, capacity=2, spill_lru=True)
+    v = _unit(rng, 3, d)
+    cache.insert_spill(v[0], v[0], answer_id=0)
+    cache.insert_spill(v[1], v[1], answer_id=1)
+    cache.lookup(v[0][None], theta_r=0.99)          # touch v0 -> v1 is LRU
+    builds = cache.dev_rebuilds
+    cache.insert_spill(v[2], v[2], answer_id=2)     # evicts v1 in place
+    res = cache.lookup(v, theta_r=0.99)
+    assert res.hit[0] and res.hit[2] and not res.hit[1]
+    assert cache.dev_rebuilds == builds             # patched, not rebuilt
+
+
+def test_device_mirror_grows_by_rebuild(rng):
+    d = 16
+    cache = SemanticCache(d, d, capacity=4096, backend="dense")
+    base = _unit(rng, 120, d)
+    cache.set_centroids(_store(base, np.ones(120), d))
+    cache.lookup(base[:1], theta_r=0.9)
+    assert cache._dev.pad == 128
+    for v in _unit(rng, 20, d):                     # 120 + 20 > 128
+        cache.insert_spill(v, v)
+    res = cache.lookup(_unit(rng, 4, d), theta_r=0.99)
+    assert cache._dev.pad == 256                    # pow2 growth
+    assert cache.dev_rebuilds == 2
+
+
+def test_batched_bookkeeping_matches_sequential(rng):
+    """Vectorized access-count/LRU updates == the seed's per-hit loop."""
+    d = 16
+    base = _unit(rng, 8, d)
+    cache = SemanticCache(d, d, capacity=16)
+    cache.set_centroids(_store(base, np.arange(8, 0, -1).astype(float), d))
+    order = cache.centroids.vectors
+    batch = np.concatenate([order[:4], order[:2]])   # dup hits in one batch
+    cache.lookup(batch, theta_r=0.99)
+    counts = cache.centroids.access_count
+    assert counts[:2].tolist() == [2.0, 2.0]
+    assert counts[2:4].tolist() == [1.0, 1.0]
+    assert cache.hits == 6 and cache.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# gateway end-to-end over a real reduced model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serving.engine import ModelEngine
+    cfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ModelEngine(params, cfg, n_slots=2, max_len=48), cfg
+
+
+def _make_gateway(rng, engine, cfg, d=16, answer_fn="embed"):
+    from repro.serving.gateway import ServingGateway
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=64,
+                           dynamic_threshold=False, theta_r=0.9))
+    hist = _unit(rng, 40, d)
+    siso.bootstrap(hist, hist, answer_ids=np.arange(40))
+    fn = None
+    if answer_fn == "embed":
+        fn = lambda toks: _unit(np.random.default_rng(int(toks[0]) + 1),
+                                1, d)[0]
+    gw = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                        answer_fn=fn)
+    return gw, siso
+
+
+def test_gateway_hits_bypass_engine(rng, tiny_engine):
+    from repro.serving.gateway import GatewayRequest
+    engine, cfg = tiny_engine
+    gw, siso = _make_gateway(rng, engine, cfg)
+    hot = siso.cache.centroids.vectors[:3].copy()
+    reqs = [GatewayRequest(rid=i, model_tokens=np.asarray([1, 2, 3], np.int32),
+                           embed_tokens=hot[i], max_new=4)
+            for i in range(3)]
+    hit = gw.submit(reqs)
+    assert hit.all()
+    assert not gw.sched.queue and not gw.sched.active   # engine untouched
+    assert not engine.active.any()
+    done = gw.drain()
+    assert len(done) == 3
+    assert all(r.served_by == "cache" for r in done)
+    assert all(r.answer is not None for r in done)
+
+
+def test_gateway_misses_flow_through_engine_and_refresh(rng, tiny_engine):
+    from repro.serving.gateway import GatewayRequest
+    engine, cfg = tiny_engine
+    gw, siso = _make_gateway(rng, engine, cfg)
+    fresh = _unit(rng, 6, 16)
+    reqs = [GatewayRequest(rid=i,
+                           model_tokens=rng.integers(
+                               0, cfg.vocab_size, size=5).astype(np.int32),
+                           embed_tokens=fresh[i], max_new=4)
+            for i in range(6)]
+    hit = gw.submit(reqs)
+    assert not hit.any()
+    done = gw.drain()
+    assert len(done) == 6
+    assert all(r.served_by == "engine" for r in done)
+    assert all(1 <= len(r.out) <= 4 for r in done)
+    # completions were recorded and (40 * 10% = 4 <= 6) triggered a refresh
+    assert gw.stats.refreshes >= 1
+    assert len(siso._log_vecs) == 0                  # log consumed by refresh
+    # the recorded answers are now servable paraphrase hits
+    res = siso.cache.lookup(fresh, theta_r=0.99, update_counts=False)
+    assert res.hit.sum() >= 5            # recorded (centroid or spill) hits
+
+
+def test_gateway_rejects_mixed_embed_batches(rng, tiny_engine):
+    from repro.serving.gateway import GatewayRequest
+    engine, cfg = tiny_engine
+    gw, siso = _make_gateway(rng, engine, cfg, answer_fn=None)
+    v = _unit(rng, 1, 16)[0]
+    toks = np.asarray([1, 2, 3], np.int32)
+    with pytest.raises(ValueError, match="mixed batch"):
+        gw.submit([GatewayRequest(rid=0, model_tokens=toks, embed_tokens=v),
+                   GatewayRequest(rid=1, model_tokens=toks)])
+
+
+def test_cold_start_refresh_floor(rng):
+    """An un-bootstrapped SISO must not re-cluster on every recorded miss."""
+    siso = SISO(SISOConfig(dim=16, answer_dim=16, capacity=64,
+                           dynamic_threshold=False, refresh_min=8))
+    vecs = _unit(rng, 8, 16)
+    for v in vecs[:7]:
+        siso.record_llm_answer(v, v)
+        assert not siso.needs_refresh()
+    siso.record_llm_answer(vecs[7], vecs[7])
+    assert siso.needs_refresh()
+
+
+def test_gateway_repeat_escape(rng, tiny_engine):
+    from repro.serving.gateway import GatewayRequest
+    engine, cfg = tiny_engine
+    gw, siso = _make_gateway(rng, engine, cfg, answer_fn=None)
+    hot = siso.cache.centroids.vectors[0].copy()
+    toks = np.asarray([1, 2, 3], np.int32)
+    h1 = gw.submit([GatewayRequest(rid=0, model_tokens=toks,
+                                   embed_tokens=hot, user_id=7, max_new=4)])
+    h2 = gw.submit([GatewayRequest(rid=1, model_tokens=toks,
+                                   embed_tokens=hot, user_id=7, max_new=4)])
+    assert h1[0] and not h2[0]           # same user repeat -> forced miss

@@ -189,42 +189,47 @@ def test_scheduler_serves_all_requests(rng):
 
 def test_scheduler_continuous_batching_matches_sequential(rng):
     """Staggered continuous batching must produce the same tokens as
-    serving each request alone (per-slot positions are independent)."""
+    serving each request alone (per-slot positions are independent).
+
+    An untrained model's near-tied logits can argmax differently between
+    the vmapped and solo compute orders (CPU thread-order noise ~1e-6),
+    so instead of demanding identical greedy strings we teacher-force
+    the engine's tokens through solo decode and require each one to sit
+    within a tight epsilon of the solo argmax: a position/kv bookkeeping
+    bug shifts logits by O(1), a reduction-order tie flip by O(1e-6)."""
     import jax
     import jax.numpy as jnp
     from repro.models import lm
     from repro.serving.engine import ModelEngine
     from repro.serving.scheduler import ContinuousBatchScheduler, Request
-    # float32: with bf16 an untrained model's near-tied logits can argmax
-    # differently between the vmapped and solo compute orders (flaky)
     cfg = get_config("qwen2.5-14b").reduced().replace(remat=False,
                                                       dtype="float32")
     params = lm.init_params(jax.random.PRNGKey(1), cfg)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
                for n in (5, 9, 7)]
 
-    def solo(toks, steps=4):
-        cache = lm.init_cache(cfg, 1, 64)
-        lg, cache = lm.prefill(params, cfg,
-                               {"tokens": jnp.asarray(toks)[None]}, cache)
-        out = [int(jnp.argmax(lg[0]))]
-        pos = len(toks)
-        for _ in range(steps - 1):
-            t = jnp.asarray([[out[-1]]], jnp.int32)
-            lg, cache = lm.decode_step(params, cfg, t, cache,
-                                       jnp.asarray(pos, jnp.int32))
-            out.append(int(jnp.argmax(lg[0])))
-            pos += 1
-        return out
-
-    expected = [solo(p) for p in prompts]
     eng = ModelEngine(params, cfg, n_slots=2, max_len=64)
     sched = ContinuousBatchScheduler(eng)
     for i, p in enumerate(prompts):          # 3 reqs > 2 slots: staggered
         sched.submit(Request(rid=i, tokens=p, max_new=4))
     done = {r.rid: r.out for r in sched.drain()}
-    for i in range(3):
-        assert done[i] == expected[i], (i, done[i], expected[i])
+    assert sorted(done) == [0, 1, 2]
+    EPS = 1e-3
+
+    for i, toks in enumerate(prompts):
+        assert len(done[i]) == 4
+        cache = lm.init_cache(cfg, 1, 64)
+        lg, cache = lm.prefill(params, cfg,
+                               {"tokens": jnp.asarray(toks)[None]}, cache)
+        pos = len(toks)
+        for step, tok in enumerate(done[i]):
+            top = float(jnp.max(lg[0]))
+            got = float(lg[0][tok])
+            assert got >= top - EPS, (i, step, tok, got, top)
+            t = jnp.asarray([[tok]], jnp.int32)
+            lg, cache = lm.decode_step(params, cfg, t, cache,
+                                       jnp.asarray(pos, jnp.int32))
+            pos += 1
 
 
 def test_cache_admission_skips_engine(rng):

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Docs cross-reference checker (run in CI).
+
+Greps every .py under src/, examples/, benchmarks/, tests/ (plus the
+root .md files) for section references of the form
+
+    DESIGN.md §7        EXPERIMENTS.md §Roofline
+    (DESIGN.md §2, §9.1)           # comma lists attach to the last doc
+
+and fails if the referenced document lacks a heading carrying that
+section token. Headings count when a line starts with '#' and contains
+'§<token>' not followed by more token characters (so §9 doesn't resolve
+via §9.1's heading, and vice versa).
+
+    python tools/check_doc_refs.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REF_RE = re.compile(r"(DESIGN|EXPERIMENTS)\.md(\s*§[\w.\-]+(?:,\s*§[\w.\-]+)*)")
+TOKEN_RE = re.compile(r"§([\w.\-]+)")
+SCAN_DIRS = ["src", "examples", "benchmarks", "tests", "tools"]
+
+
+def headings(doc_path: pathlib.Path) -> list[str]:
+    out = []
+    for line in doc_path.read_text(encoding="utf-8").splitlines():
+        if line.startswith("#"):
+            out.append(line)
+    return out
+
+
+def section_exists(tokens_in_headings: list[str], token: str) -> bool:
+    pat = re.compile(r"§" + re.escape(token) + r"(?![\w.\-])")
+    return any(pat.search(h) for h in tokens_in_headings)
+
+
+def collect_refs(root: pathlib.Path):
+    files = [root / m for m in ("README.md", "DESIGN.md", "EXPERIMENTS.md",
+                                "ROADMAP.md") if (root / m).exists()]
+    for d in SCAN_DIRS:
+        files.extend(sorted((root / d).rglob("*.py")))
+    for f in files:
+        try:
+            text = f.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError):
+            continue
+        for m in REF_RE.finditer(text):
+            doc = m.group(1)
+            for tok in TOKEN_RE.findall(m.group(2)):
+                tok = tok.rstrip(".-")
+                line = text[: m.start()].count("\n") + 1
+                yield f.relative_to(root), line, doc, tok
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    docs = {}
+    for name in ("DESIGN", "EXPERIMENTS"):
+        path = root / f"{name}.md"
+        if not path.exists():
+            print(f"MISSING DOCUMENT: {name}.md")
+            return 1
+        docs[name] = headings(path)
+    bad, total = [], 0
+    for rel, line, doc, tok in collect_refs(root):
+        total += 1
+        if not section_exists(docs[doc], tok):
+            bad.append((rel, line, doc, tok))
+    if bad:
+        print(f"{len(bad)} dangling section reference(s):")
+        for rel, line, doc, tok in bad:
+            print(f"  {rel}:{line}: {doc}.md §{tok} — no such heading")
+        return 1
+    print(f"doc refs OK: {total} references resolve "
+          f"(DESIGN.md: {len(docs['DESIGN'])} headings, "
+          f"EXPERIMENTS.md: {len(docs['EXPERIMENTS'])} headings)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
