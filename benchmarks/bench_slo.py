@@ -1,0 +1,250 @@
+"""Live-gateway SLO benchmark across diverse load scenarios (EXPERIMENTS.md
+§SLO).
+
+Unlike ``fig9_slo`` (the analytic discrete-event simulator), this bench
+drives the REAL serving stack — ``ServingGateway`` over a reduced
+``ModelEngine`` with continuous batching — through the scenario library
+in ``repro/serving/workloads.py``, for SISO and the NoCache / VectorCache
+baselines, and emits machine-readable ``results/BENCH_slo.json``.
+
+Timing uses a virtual clock: every scheduler tick costs ``TICK_S``
+virtual seconds, so arrival rates, M/D/1 lambda monitoring, observed
+waits, and SLO attainment are all deterministic and hardware-independent
+while the engine itself runs real jitted prefill/decode. The closed
+control loop (DESIGN.md §7.1) is fully live: the scheduler feeds every
+completion's observed wait into ``DynamicThreshold.feedback()`` and its
+measured service time into the L EMA.
+
+    PYTHONPATH=src python -m benchmarks.bench_slo            # full run
+    PYTHONPATH=src python -m benchmarks.bench_slo --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax
+import numpy as np
+
+from benchmarks.common import save, timer
+from repro.configs.base import get_config
+from repro.core.siso import SISO, SISOConfig
+from repro.data.synth import QueryBatch
+from repro.models import lm
+from repro.serving.baselines import NoCache, VectorCache
+from repro.serving.engine import ModelEngine
+from repro.serving.gateway import GatewayRequest, ServingGateway
+from repro.serving.simulator import bootstrap_frontend
+from repro.serving.workloads import SCENARIOS, build_scenario
+
+DIM = 32
+N_CLUSTERS = 240
+CAPACITY = 160
+THETA_R = 0.86
+N_SLOTS = 2
+MAX_NEW = 6
+TICK_S = 0.05            # virtual seconds per scheduler tick
+LAMBDA_WINDOW = 2.0      # controller lambda refresh (virtual seconds)
+# zero-load e2e ~= prefill tick + (MAX_NEW-1) decode ticks; SLO is the
+# paper's 1.3x rule on top of it
+ZERO_LOAD_S = MAX_NEW * TICK_S
+SLO_S = 1.3 * ZERO_LOAD_S
+SYSTEMS = ["siso", "vectorcache", "nocache"]
+
+
+class VirtualClock:
+    """Callable clock the gateway/scheduler read; the drive loop owns t."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def make_engine():
+    cfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ModelEngine(params, cfg, n_slots=N_SLOTS, max_len=48), cfg
+
+
+def make_frontend(kind: str, train: QueryBatch):
+    if kind == "nocache":
+        return NoCache()
+    if kind == "vectorcache":
+        fe = VectorCache(DIM, DIM, CAPACITY, policy="lru", theta_r=THETA_R)
+        bootstrap_frontend(fe, train)
+        return fe
+    assert kind == "siso"
+    cfg = SISOConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
+                     theta_r=THETA_R, dynamic_threshold=True)
+    # llm_latency starts as a deliberately wrong guess: the live EMA
+    # calibration must pull it to the engine's real (virtual) service time
+    siso = SISO(cfg, slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    siso.threshold.lambda_window = LAMBDA_WINDOW
+    bootstrap_frontend(siso, train)
+    return siso
+
+
+def drive(gw: ServingGateway, clock: VirtualClock, batch: QueryBatch,
+          vocab: int, seed: int = 0, chunk: int = 8,
+          max_ticks: int = 200_000) -> None:
+    """Discrete-event drive loop: submit arrivals as they come due, one
+    engine tick per TICK_S of virtual time (gw.submit's internal tick is
+    billed too), jump the clock over idle gaps."""
+    rng = np.random.default_rng(seed)
+    n = len(batch.vectors)
+    toks = rng.integers(0, vocab, size=(n, 6)).astype(np.int32)
+    i = 0
+    for _ in range(max_ticks):
+        if i >= n and not gw.sched.queue and not gw.sched.active:
+            return
+        due = []
+        while i < n and batch.arrivals[i] <= clock.t:
+            due.append(GatewayRequest(
+                rid=i, model_tokens=toks[i],
+                embed_tokens=batch.vectors[i],
+                user_id=int(batch.user_ids[i]), max_new=MAX_NEW,
+                answer_vec=batch.answers[i]))
+            i += 1
+        if due:
+            for j in range(0, len(due), chunk):
+                gw.submit(due[j: j + chunk], now=clock.t)
+                clock.t += TICK_S           # submit ran one engine tick
+        else:
+            gw.step()
+            clock.t += TICK_S
+        if (not gw.sched.active and not gw.sched.queue and i < n
+                and batch.arrivals[i] > clock.t):
+            clock.t = float(batch.arrivals[i])
+    raise RuntimeError("drive loop exceeded max_ticks")
+
+
+def _quality(gw: ServingGateway, batch: QueryBatch) -> dict:
+    """Answer cosine of cache-served requests vs ground truth (1.0 for
+    engine-served), plus the paper's SLO-weighted F1 proxy."""
+    q, met = [], []
+    slo = gw.slo_latency
+    for r in gw.done:
+        if r.served_by == "cache":
+            q.append(float(np.asarray(r.answer) @ batch.answers[r.rid]))
+        else:
+            q.append(1.0)
+        met.append((r.t_done - r.t_submit) <= slo)
+    q, met = np.asarray(q), np.asarray(met)
+    return {"mean_quality": float(q.mean()) if len(q) else 1.0,
+            "slo_weighted_quality": float((q * met).mean()) if len(q)
+            else 0.0}
+
+
+def _sanitize(obj):
+    """inf-free copy (strict-JSON friendly: predicted_wait can be inf)."""
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_sanitize(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
+
+
+def run_system(kind: str, scenario, engine, cfg) -> dict:
+    fe = make_frontend(kind, scenario.train)
+    clock = VirtualClock()
+    gw = ServingGateway(fe, engine, embed_fn=lambda vs: np.stack(vs),
+                        clock=clock, slo_latency=SLO_S)
+    with timer() as t:
+        drive(gw, clock, scenario.test, cfg.vocab_size, seed=1)
+    rep = gw.report()
+    rep.update(_quality(gw, scenario.test))
+    rep["wall_s"] = t.s
+    rep["virtual_s"] = clock.t
+    trace = rep.get("theta_trace")
+    if trace:
+        th = [p[1] for p in trace]
+        rep["theta_min"], rep["theta_max"] = min(th), max(th)
+    return _sanitize(rep)
+
+
+def run_scenario(name: str, engine, cfg, *, n_train: int, n_test: int,
+                 seed: int, systems) -> dict:
+    scn = build_scenario(name, dim=DIM, n_clusters=N_CLUSTERS, seed=seed,
+                         n_train=n_train, n_test=n_test)
+    out = {"notes": scn.notes, "n_test": len(scn.test.vectors)}
+    for kind in systems:
+        out[kind] = run_system(kind, scn, engine, cfg)
+        r = out[kind]
+        print(f"  {name:12s} {kind:12s} hit={r['hit_ratio']:.2f} "
+              f"slo={r.get('slo_attainment', 0.0):.2f} "
+              f"mean_wait={r.get('mean_wait', 0.0):.2f}s "
+              f"theta=[{r.get('theta_min', float('nan')):.2f},"
+              f"{r.get('theta_max', float('nan')):.2f}] "
+              f"quality={r['mean_quality']:.2f} wall={r['wall_s']:.0f}s")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
+                    help="subset of scenarios to run")
+    ap.add_argument("--systems", nargs="*", default=SYSTEMS)
+    ap.add_argument("--n", type=int, default=160,
+                    help="test requests per scenario")
+    ap.add_argument("--n-train", type=int, default=1200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one tiny scenario, siso+vectorcache")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.scenarios = ["repeat_heavy"]
+        args.systems = ["siso", "vectorcache"]
+        args.n, args.n_train = 40, 240
+
+    engine, cfg = make_engine()
+    payload = {
+        "config": {"dim": DIM, "n_clusters": N_CLUSTERS,
+                   "capacity": CAPACITY, "theta_r": THETA_R,
+                   "n_slots": N_SLOTS, "max_new": MAX_NEW,
+                   "tick_s": TICK_S, "slo_s": SLO_S,
+                   "lambda_window": LAMBDA_WINDOW,
+                   "n_test": args.n, "n_train": args.n_train,
+                   "smoke": args.smoke},
+        "scenarios": {},
+    }
+    print(f"== live-gateway SLO bench: {len(args.scenarios)} scenario(s), "
+          f"systems={args.systems}, SLO={SLO_S:.2f}s virtual ==")
+    for name in args.scenarios:
+        payload["scenarios"][name] = run_scenario(
+            name, engine, cfg, n_train=args.n_train, n_test=args.n,
+            seed=args.seed, systems=args.systems)
+
+    path = save("BENCH_slo", payload, out_dir="results")
+    print(f"saved -> {path}")
+
+    # -- self-checks -------------------------------------------------------
+    scns = payload["scenarios"]
+    for name, res in scns.items():
+        for kind in args.systems:
+            assert res[kind]["completed"] == res["n_test"], \
+                f"{name}/{kind}: dropped requests"
+    if "siso" in args.systems and "vectorcache" in args.systems:
+        for name in ("repeat_heavy", "topic_drift"):
+            if name not in scns:
+                continue
+            s, v = scns[name]["siso"], scns[name]["vectorcache"]
+            assert s["hit_ratio"] >= v["hit_ratio"], \
+                f"{name}: SISO hit ratio below VectorCache"
+            assert s["slo_attainment"] >= v["slo_attainment"], \
+                f"{name}: SISO SLO attainment below VectorCache"
+    if not args.smoke and "siso" in args.systems:
+        # theta_R must actually adapt somewhere under diverse load
+        assert any(res["siso"].get("theta_min") is not None
+                   and res["siso"]["theta_min"] < res["siso"]["theta_max"]
+                   for res in scns.values()), "theta_R never adapted"
+        # and the EMA must have pulled L off the wrong constructor guess
+        assert any(res["siso"]["n_feedback"] > 0 for res in scns.values())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

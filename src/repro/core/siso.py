@@ -72,8 +72,19 @@ class SISO:
         ids mark anonymous requests: no repeat tracking, no state kept."""
         vectors = np.atleast_2d(vectors)
         self.threshold.observe_arrivals(now, len(vectors))
+        # pre-lookup spill recency snapshot: a repeat escape must be able
+        # to undo the phantom hit's LRU bump (else escaped repeats keep
+        # spill rows artificially warm and pollute victim selection)
+        prev_lru = (self.cache._spill_last_use.copy()
+                    if user_ids is not None and len(self.cache.spill)
+                    else None)
         res = self.cache.lookup(vectors, self.theta_r)
         if user_ids is not None:
+            # spill-hitting batch positions in the lookup's tick-assignment
+            # order, captured before escapes rewrite res in place
+            spill_order = np.where(res.hit & (res.region == 1))[0]
+            escaped_spill: list[tuple[int, int]] = []   # (batch pos, row)
+            nc = len(self.cache.centroids)
             for b, u in enumerate(user_ids):
                 if int(u) < 0:
                     continue
@@ -88,13 +99,46 @@ class SISO:
                     if res.region[b] == 0:
                         self.cache.centroids.access_count[
                             int(res.entry[b])] -= 1.0
+                    elif res.region[b] == 1:
+                        escaped_spill.append((b, int(res.entry[b]) - nc))
                     self.cache.hits -= 1
                     self.cache.misses += 1
                     res.hit[b] = False
                     res.region[b] = -1
                     res.entry[b] = -1
                 self._user_last[int(u)] = (vectors[b], now)
+            if escaped_spill:
+                self._restore_spill_recency(res, prev_lru, spill_order,
+                                            escaped_spill, nc)
         return res
+
+    def _restore_spill_recency(self, res: LookupResult,
+                               prev_lru: Optional[np.ndarray],
+                               spill_order: np.ndarray,
+                               escaped_spill: list[tuple[int, int]],
+                               nc: int) -> None:
+        """Undo the LRU recency bump of escaped spill phantom hits.
+
+        The batched lookup assigned ticks base+1+j to the j-th spill hit
+        in batch order (duplicates keep the latest). An escaped row's
+        recency reverts to its latest surviving tick from this batch, or
+        to its pre-lookup value when no legitimate hit touched it."""
+        base = self.cache._spill_clock - len(spill_order)
+        escaped_pos = {b for b, _ in escaped_spill}
+        for _, row in escaped_spill:
+            legit = [base + 1 + j for j, p in enumerate(spill_order)
+                     if p not in escaped_pos
+                     and int(res.entry[p]) - nc == row]
+            if legit:
+                self.cache._spill_last_use[row] = max(legit)
+            elif prev_lru is not None and row < len(prev_lru):
+                self.cache._spill_last_use[row] = prev_lru[row]
+
+    def observe_completion(self, wait: float,
+                           service: Optional[float] = None) -> None:
+        """An engine (or inline-hit) completion's realized wait/service,
+        fed into the dynamic-threshold control loop (DESIGN.md §7.1)."""
+        self.threshold.observe_completion(wait, service)
 
     def record_llm_answer(self, vector: np.ndarray, answer: np.ndarray,
                           answer_id: int = -1) -> None:
@@ -176,6 +220,7 @@ class SISO:
     # --------------------------------------------------------------- metrics
 
     def stats(self) -> dict:
+        thr = self.threshold
         return {
             "hit_ratio": self.cache.hit_ratio,
             "hits": self.cache.hits,
@@ -183,5 +228,9 @@ class SISO:
             "n_centroids": len(self.cache.centroids),
             "n_spill": len(self.cache.spill),
             "theta_r": self.theta_r,
-            "lambda": self.threshold.lam,
+            "lambda": thr.lam,
+            "llm_latency_ema": thr.llm_latency,
+            "predicted_wait": thr.predicted_wait(thr.theta),
+            "wait_error": thr.wait_error_stats(),
+            "n_feedback": thr.n_feedback,
         }

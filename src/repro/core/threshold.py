@@ -7,12 +7,32 @@ SISO picks the HIGHEST theta_R whose predicted W satisfies the SLO S. The
 h(theta) map is the T2H table sampled offline (5% of fresh queries); lambda
 is monitored online (10 s refresh); a +-10% error band feeds back observed
 waits into a theta correction.
+
+This module is the *controller* shared by both serving paths (DESIGN.md
+§7.1): the discrete-event simulator and the live gateway both drive it
+through the same entry points —
+
+    observe_arrivals(t, n)        lambda monitoring -> windowed retune
+    observe_completion(wait, s)   +-10% feedback + service-time EMA
+    calibrate(L)                  seed L from an engine estimate
+
+``llm_latency`` (L) starts as a constructor guess but is re-calibrated
+online from measured per-request service times (EMA), so the M/D/1
+prediction tracks the engine actually behind the cache rather than a
+static configuration value.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
+
+# bounded telemetry windows: the controller lives inside long-running
+# serving objects, so traces describe the recent past, not the lifetime
+TRACE_WINDOW = 4096
+ERR_WINDOW = 512
 
 
 @dataclass
@@ -50,16 +70,32 @@ def mdo1_wait(lam: float, E: float) -> float:
 class DynamicThreshold:
     t2h: T2HTable
     slo_latency: float            # S
-    llm_latency: float            # L (measured from the engine)
+    llm_latency: float            # L — seed guess, EMA-calibrated online
     lambda_window: float = 10.0   # seconds between lambda refreshes
     error_band: float = 0.10
     enabled: bool = True
+    ema_alpha: float = 0.2        # service-time EMA weight
     # state
     lam: float = 0.0
     theta: float = 0.98
     _arrivals: list = field(default_factory=list)
-    _last_refresh: float = 0.0
+    # None until the first observed arrival: anchoring the window at the
+    # first arrival (not 0.0) keeps a wall-clock first batch from
+    # "satisfying" the window immediately and retuning on a meaningless
+    # lambda = first_batch_size / lambda_window
+    _last_refresh: Optional[float] = None
     _bias: int = 0                # feedback correction in table steps
+    _calibrated: bool = False     # has a measured service time arrived?
+    # telemetry (read by GatewayStats / report(); the theta_R trace is
+    # kept by the callers — gateway per batch, simulator per request —
+    # not here, to avoid three differently-sampled copies)
+    n_feedback: int = 0
+    lam_trace: deque = field(
+        default_factory=lambda: deque(maxlen=TRACE_WINDOW))  # (t, lam)
+    wait_errors: deque = field(
+        default_factory=lambda: deque(maxlen=ERR_WINDOW))  # relative err
+
+    # ------------------------------------------------------------ arrivals
 
     def observe_arrival(self, t: float) -> None:
         self.observe_arrivals(t, 1)
@@ -68,12 +104,39 @@ class DynamicThreshold:
         """Batched arrival accounting: a size-n batch at time t counts n
         arrivals toward lambda without a per-request Python call."""
         self._arrivals.extend([t] * n)
+        if self._last_refresh is None:
+            self._last_refresh = t
+            return
         if t - self._last_refresh >= self.lambda_window:
             horizon = t - self.lambda_window
             self._arrivals = [a for a in self._arrivals if a >= horizon]
             self.lam = len(self._arrivals) / self.lambda_window
             self._last_refresh = t
+            self.lam_trace.append((t, self.lam))
             self.retune()
+
+    # --------------------------------------------------------- calibration
+
+    def calibrate(self, llm_latency: float) -> None:
+        """Seed L from an external estimate (e.g. the analytic engine's
+        mean service time). Later measured services EMA from here."""
+        self.llm_latency = float(llm_latency)
+        self._calibrated = True
+
+    def observe_service(self, service: float) -> None:
+        """One measured per-request engine service time: EMA-update L so
+        the M/D/1 prediction tracks the real engine, not the constructor
+        guess. The first measurement replaces an uncalibrated guess."""
+        service = float(service)
+        if not np.isfinite(service) or service <= 0:
+            return
+        if not self._calibrated:
+            self.llm_latency = service
+            self._calibrated = True
+        else:
+            self.llm_latency += self.ema_alpha * (service - self.llm_latency)
+
+    # ------------------------------------------------------------- predict
 
     def predicted_wait(self, theta: float) -> float:
         E = self.llm_latency * (1.0 - self.t2h.h(theta))
@@ -83,7 +146,8 @@ class DynamicThreshold:
         """Pick the highest theta with W(theta) <= S (then apply feedback
         bias). Falls back to the lowest theta when nothing is feasible."""
         if not self.enabled:
-            self.theta = float(self.t2h.thetas[0])
+            # fixed-theta operation (SISO-NoDTA): the configured operating
+            # point must never be overwritten by the table
             return self.theta
         chosen = None
         for i, th in enumerate(self.t2h.thetas):  # descending thetas
@@ -96,19 +160,54 @@ class DynamicThreshold:
         self.theta = float(self.t2h.thetas[chosen])
         return self.theta
 
+    # ------------------------------------------------------------ feedback
+
     def feedback(self, observed_wait: float) -> None:
         """±10% band: if the realized wait beats/misses the model, shift the
         operating point one table step (paper §4.3 last paragraph)."""
+        self.n_feedback += 1
         predicted = self.predicted_wait(self.theta)
-        if predicted == 0:
+        if np.isfinite(predicted) and predicted > 0:
+            self.wait_errors.append(
+                (observed_wait - predicted) / predicted)
+        if not self.enabled:
             return
         if not np.isfinite(predicted):
             self._bias += 1
         else:
-            err = (observed_wait - predicted) / predicted
+            # degenerate prediction (h(theta)=1 -> W=0, e.g. at the table
+            # floor): fall back to the SLO as the band reference, so the
+            # bias can still decay once realized waits are comfortably
+            # inside the SLO — without this the controller wedges at the
+            # lowest theta after an overload episode
+            ref = predicted if predicted > 0 else self.slo_latency
+            if ref <= 0:
+                return
+            err = (observed_wait - ref) / ref
             if err > self.error_band:
                 self._bias += 1      # waits longer than modeled -> lower theta
             elif err < -self.error_band and self._bias > 0:
                 self._bias -= 1
         self._bias = int(np.clip(self._bias, 0, len(self.t2h.thetas) - 1))
         self.retune()
+
+    def observe_completion(self, wait: float,
+                           service: Optional[float] = None) -> None:
+        """One served request: ``wait`` is its realized sojourn (0 for an
+        inline cache hit), ``service`` its measured engine time (None for
+        hits — nothing to calibrate from). This is the single completion
+        entry point both the simulator and the live scheduler call."""
+        self.feedback(wait)
+        if service is not None:
+            self.observe_service(service)
+
+    # ----------------------------------------------------------- telemetry
+
+    def wait_error_stats(self) -> dict:
+        """Predicted-vs-observed wait error over the recent window."""
+        if not self.wait_errors:
+            return {"mean": 0.0, "mean_abs": 0.0, "n": 0}
+        e = np.asarray(self.wait_errors)
+        return {"mean": float(e.mean()),
+                "mean_abs": float(np.abs(e).mean()),
+                "n": int(len(e))}

@@ -1,5 +1,8 @@
-"""Serving layer: engines, continuous batching, gateway, SLO simulator."""
+"""Serving layer: engines, continuous batching, gateway, SLO simulator,
+scenario-diverse workload generators."""
 from repro.serving.gateway import (GatewayRequest, GatewayStats,
                                    ServingGateway)
+from repro.serving.workloads import SCENARIOS, Scenario, build_scenario
 
-__all__ = ["GatewayRequest", "GatewayStats", "ServingGateway"]
+__all__ = ["GatewayRequest", "GatewayStats", "ServingGateway",
+           "SCENARIOS", "Scenario", "build_scenario"]

@@ -63,7 +63,6 @@ class VectorCache:
         self.policy = policy
         self.theta_r = theta_r
         self.rng = np.random.default_rng(seed)
-        n0 = capacity if policy != "optimal" else 1024
         self.vectors = np.zeros((0, dim), np.float32)
         self.answers = np.zeros((0, answer_dim), np.float32)
         self.answer_id = np.zeros((0,), np.int64)
@@ -73,7 +72,6 @@ class VectorCache:
         self.hits = 0
         self.misses = 0
         self.times = FrontendTimes()
-        del n0
 
     def __len__(self) -> int:
         return len(self.vectors)
@@ -93,11 +91,13 @@ class VectorCache:
         hit = sims >= self.theta_r
         answer = np.zeros((B, self.answer_dim), np.float32)
         aid = np.full(B, -1, np.int64)
-        for b in np.where(hit)[0]:
-            j = int(idx[b])
-            answer[b] = self.answers[j]
-            aid[b] = self.answer_id[j]
-            self._touch(j)
+        rows = idx[hit]
+        if len(rows):
+            # vectorized host gather + batched policy touch — no per-hit
+            # Python loop on the serving path (cf. SemanticCache.lookup)
+            answer[hit] = self.answers[rows]
+            aid[hit] = self.answer_id[rows]
+            self._touch_batch(rows)
         self.hits += int(hit.sum())
         self.misses += int(B - hit.sum())
         entry = np.where(hit, idx, -1).astype(np.int64)
@@ -128,12 +128,16 @@ class VectorCache:
             return 1.0
         return float(self._clock)       # lru / fifo timestamp; rr ignores
 
-    def _touch(self, j: int) -> None:
+    def _touch_batch(self, rows: np.ndarray) -> None:
+        """Policy bookkeeping for one batch of hit rows, duplicate-safe:
+        LRU assigns per-hit clock ticks in batch order (duplicates keep
+        the latest, as the sequential loop did); LFU counts every hit of
+        a row, including duplicates within the batch (np.add.at)."""
         if self.policy == "lru":
-            self._clock += 1
-            self.meta[j] = self._clock
+            self.meta[rows] = self._clock + 1 + np.arange(len(rows))
+            self._clock += len(rows)
         elif self.policy == "lfu":
-            self.meta[j] += 1.0
+            np.add.at(self.meta, rows, 1.0)
 
     def _victim(self) -> int:
         if self.policy == "rr":

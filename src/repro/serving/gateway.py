@@ -10,12 +10,20 @@ examples used to hand-wire:
       --hit--> answered inline, never touches an engine slot
       --miss--> ContinuousBatchScheduler -> ModelEngine decode slots
       --completion--> record_llm_answer (spill insert + offline log)
+                      + observe_completion (wait feedback + L EMA,
+                        DESIGN.md §7.1)
       --every +refresh_frac new queries--> Algorithm-1 refresh
 
-The gateway is deliberately thin: SISO owns cache policy, the scheduler
-owns slot management, and this class owns only batching, wiring, and
-serving metrics (per-batch lookup latency percentiles, hit/miss split,
-refresh cadence).
+The gateway is deliberately thin: the frontend owns cache policy, the
+scheduler owns slot management, and this class owns only batching, wiring,
+and serving metrics (per-batch lookup latency percentiles, hit/miss split,
+refresh cadence, theta_R trace, SLO attainment).
+
+The frontend is usually a :class:`repro.core.siso.SISO`, but any object
+with the CacheFrontend protocol (``lookup``/``insert``/``stats``) works —
+``NoCache`` and ``VectorCache`` run through the identical path, which is
+how ``benchmarks/bench_slo.py`` compares systems on the *live* pipeline
+instead of the analytic simulator.
 """
 from __future__ import annotations
 
@@ -26,7 +34,6 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.siso import SISO
 from repro.serving.engine import ModelEngine
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
@@ -41,6 +48,9 @@ class GatewayRequest:
     user_id: Optional[int] = None
     max_new: int = 32
     eos_id: int = -1
+    # ground-truth answer embedding to record on engine completion
+    # (benches that know it); None -> the gateway's answer_fn
+    answer_vec: Optional[np.ndarray] = None
 
 
 # per-batch samples kept for percentile reporting; bounded because the
@@ -56,6 +66,10 @@ class GatewayStats:
     lookup_s: deque = field(default_factory=lambda: deque(maxlen=STATS_WINDOW))
     batch_sizes: deque = field(
         default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    # (now, theta_R) sampled once per submitted batch — the live trace of
+    # the dynamic-threshold operating point under this gateway's load
+    theta_trace: deque = field(
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
 
     def lookup_percentiles(self) -> dict:
         if not self.lookup_s:
@@ -67,7 +81,8 @@ class GatewayStats:
 
 
 class ServingGateway:
-    """Batched online serving over a SISO cache + continuous-batching engine.
+    """Batched online serving over a cache frontend + continuous-batching
+    engine.
 
     embed_fn: list of embed-token arrays -> (B, dim) float32 query vectors
               (one batched call per submitted batch — the embedder is part
@@ -75,18 +90,25 @@ class ServingGateway:
     answer_fn: generated token array -> answer embedding, used to record
               engine completions back into the cache; None disables
               recording (pure read-only cache).
+    slo_latency: per-request SLO used for attainment reporting; defaults
+              to the frontend's DynamicThreshold SLO when it has one.
     """
 
-    def __init__(self, siso: SISO, engine: ModelEngine,
+    def __init__(self, siso, engine: ModelEngine,
                  embed_fn: Callable[[Sequence[np.ndarray]], np.ndarray],
                  answer_fn: Optional[Callable] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 auto_refresh: bool = True):
-        self.siso = siso
+                 auto_refresh: bool = True,
+                 slo_latency: Optional[float] = None):
+        self.siso = siso                # any CacheFrontend; SISO-rich paths
+        self.frontend = siso            # are feature-detected per call
         self.engine = engine
         self.embed_fn = embed_fn
         self.auto_refresh = auto_refresh
         self.clock = clock or time.perf_counter
+        thr = getattr(siso, "threshold", None)
+        self.slo_latency = (slo_latency if slo_latency is not None
+                            else getattr(thr, "slo_latency", None))
         self.sched = ContinuousBatchScheduler(engine, cache=siso,
                                               answer_fn=answer_fn,
                                               clock=self.clock)
@@ -118,14 +140,21 @@ class ServingGateway:
             user_ids = np.asarray([-1 if r.user_id is None else r.user_id
                                    for r in batch])
         t0 = time.perf_counter()
-        res = self.siso.handle_batch(vectors, now=now, user_ids=user_ids)
+        if hasattr(self.frontend, "handle_batch"):
+            res = self.frontend.handle_batch(vectors, now=now,
+                                             user_ids=user_ids)
+        else:
+            res = self.frontend.lookup(vectors, now=now, user_ids=user_ids)
         self.stats.lookup_s.append(time.perf_counter() - t0)
         self.stats.batch_sizes.append(len(batch))
         self.stats.submitted += len(batch)
+        theta = getattr(self.frontend, "theta_r", None)
+        if theta is not None:
+            self.stats.theta_trace.append((float(now), float(theta)))
         for b, r in enumerate(batch):
             req = Request(rid=r.rid, tokens=np.asarray(r.model_tokens),
                           max_new=r.max_new, eos_id=r.eos_id,
-                          vector=vectors[b])
+                          vector=vectors[b], answer_vec=r.answer_vec)
             if res.hit[b]:
                 self.sched.admit_resolved(req, res.answer[b])
             else:
@@ -153,16 +182,17 @@ class ServingGateway:
     # ------------------------------------------------------------- internal
 
     def _maybe_refresh(self) -> None:
-        if self.auto_refresh and self.siso.needs_refresh():
-            self.siso.refresh()
+        if (self.auto_refresh and hasattr(self.frontend, "needs_refresh")
+                and self.frontend.needs_refresh()):
+            self.frontend.refresh()
             self.stats.refreshes += 1
 
     # --------------------------------------------------------------- report
 
     def report(self) -> dict:
-        s = self.siso.stats()
+        s = self.frontend.stats() if hasattr(self.frontend, "stats") else {}
         done = self.sched.done
-        return {
+        rep = {
             **s,
             "submitted": self.stats.submitted,
             "completed": len(done),
@@ -170,6 +200,24 @@ class ServingGateway:
             "served_engine": sum(r.served_by == "engine" for r in done),
             "refreshes": self.stats.refreshes,
             "lookup": self.stats.lookup_percentiles(),
-            "dev_rebuilds": self.siso.cache.dev_rebuilds,
-            "dev_row_writes": self.siso.cache.dev_row_writes,
         }
+        waits = np.asarray([r.t_done - r.t_submit for r in done])
+        eng_waits = np.asarray([r.t_done - r.t_submit for r in done
+                                if r.served_by == "engine"])
+        if len(eng_waits):
+            rep["mean_wait"] = float(eng_waits.mean())
+            rep["p99_wait"] = float(np.percentile(eng_waits, 99))
+        if self.slo_latency is not None and len(waits):
+            rep["slo_latency"] = float(self.slo_latency)
+            rep["slo_attainment"] = float(
+                (waits <= self.slo_latency).mean())
+        if self.stats.theta_trace:
+            rep["theta_trace"] = [list(p) for p in self.stats.theta_trace]
+        thr = getattr(self.frontend, "threshold", None)
+        if thr is not None:
+            rep["lam_trace"] = [list(p) for p in thr.lam_trace]
+        cache = getattr(self.frontend, "cache", None)
+        if cache is not None and hasattr(cache, "dev_rebuilds"):
+            rep["dev_rebuilds"] = cache.dev_rebuilds
+            rep["dev_row_writes"] = cache.dev_row_writes
+        return rep

@@ -24,6 +24,9 @@ class Request:
     max_new: int = 32
     eos_id: int = -1             # -1: never stop early
     vector: Optional[np.ndarray] = None   # query embedding (cache key)
+    # pre-computed answer embedding to record on completion (benches and
+    # tests that know the ground-truth answer); None -> answer_fn(out)
+    answer_vec: Optional[np.ndarray] = None
     # filled during serving
     out: list = field(default_factory=list)
     slot: int = -1
@@ -64,6 +67,7 @@ class ContinuousBatchScheduler:
                 req.answer = res.answer[0]
                 req.t_first = req.t_done = self.clock()
                 self.done.append(req)
+                self._observe(req)
                 return
         self.queue.append(req)
 
@@ -80,6 +84,10 @@ class ContinuousBatchScheduler:
         req.answer = answer
         req.t_submit = req.t_first = req.t_done = self.clock()
         self.done.append(req)
+        # a hit's realized wait is ~0: feeding it keeps the observed-wait
+        # signal an average over ALL requests, matching what the M/D/1
+        # W(theta) = L(1-h) + queue actually predicts (DESIGN.md §7.1)
+        self._observe(req)
 
     def step(self) -> int:
         """One scheduler tick: admit -> prefill -> batched decode -> retire.
@@ -115,6 +123,10 @@ class ContinuousBatchScheduler:
             eng.release(slot)
             self.done.append(req)
             self._record(req)
+            # close the control loop: this completion's realized sojourn
+            # and measured engine service time feed the dynamic threshold
+            # (±10% wait feedback + service-time EMA calibration)
+            self._observe(req)
         return len(self.active)
 
     def drain(self, max_ticks: int = 10_000) -> list[Request]:
@@ -129,8 +141,12 @@ class ContinuousBatchScheduler:
         """Completed engine request: register its answer with the cache."""
         if self.cache is None or req.vector is None:
             return
-        ans = (self.answer_fn(np.asarray(req.out))
-               if self.answer_fn is not None else None)
+        if req.answer_vec is not None:
+            ans = np.asarray(req.answer_vec, np.float32)
+        elif self.answer_fn is not None:
+            ans = self.answer_fn(np.asarray(req.out))
+        else:
+            ans = None
         if ans is None:
             return
         req.answer = ans
@@ -138,3 +154,15 @@ class ContinuousBatchScheduler:
             self.cache.record_llm_answer(req.vector, ans, answer_id=req.rid)
         else:
             self.cache.insert(req.vector, ans, answer_id=req.rid)
+
+    def _observe(self, req: Request) -> None:
+        """Feed a completion's observed wait (and, for engine-served
+        requests, its measured service time) into the cache frontend's
+        control loop, when it has one."""
+        if self.cache is None or not hasattr(self.cache,
+                                             "observe_completion"):
+            return
+        wait = req.t_done - req.t_submit
+        service = (req.t_done - req.t_first
+                   if req.served_by == "engine" else None)
+        self.cache.observe_completion(wait, service)

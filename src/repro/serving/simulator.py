@@ -80,9 +80,12 @@ class ServingSimulator:
         eng.reset()
         n = len(batch.vectors)
         if self.is_siso and calibrate_siso:
-            fe.threshold.llm_latency = eng.mean_service_time(
+            # seed L from the analytic estimate; the controller's online
+            # EMA (observe_completion below) refines it from realized
+            # service times — the same loop the live gateway runs
+            fe.threshold.calibrate(eng.mean_service_time(
                 float(np.mean(batch.tokens_in)),
-                float(np.mean(batch.tokens_out)))
+                float(np.mean(batch.tokens_out))))
         pending: list[tuple[float, int]] = []   # (ready_time, query idx)
         e2e = np.zeros(n)
         wait = np.zeros(n)
@@ -115,6 +118,11 @@ class ServingSimulator:
                 hit[i] = True
                 e2e[i] = fe_cost
                 quality[i] = float(res.answer[0] @ batch.answers[i])
+                if self.is_siso:
+                    # an inline hit's realized wait is just the frontend
+                    # cost — feeding it keeps the observed-wait average
+                    # aligned with what W(theta) models (all requests)
+                    fe.observe_completion(fe_cost)
             else:
                 start, done = eng.submit(t + fe_cost,
                                          int(batch.tokens_in[i]),
@@ -126,7 +134,7 @@ class ServingSimulator:
                 wait[i] = start - t
                 heapq.heappush(pending, (done, i))
                 if self.is_siso:
-                    fe.threshold.feedback(done - t)
+                    fe.observe_completion(done - t, service)
                     if fe.needs_refresh():
                         fe.refresh()
             if self.is_siso:

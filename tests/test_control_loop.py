@@ -1,0 +1,298 @@
+"""Live SLO control loop (DESIGN.md §7.1): controller regressions —
+cold-start lambda anchoring, NoDTA theta stability, EMA calibration,
+spill-recency restore on repeat escape, vectorized VectorCache lookup,
+and the workload scenario library."""
+import numpy as np
+import pytest
+
+from repro.core.siso import SISO, SISOConfig
+from repro.core.threshold import DynamicThreshold, T2HTable
+from repro.serving.baselines import VectorCache
+
+
+def _unit(rng, n, d=16):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _table():
+    thetas = np.asarray([0.98, 0.92, 0.86, 0.80, 0.74, 0.68, 0.62])
+    hits = np.asarray([0.05, 0.15, 0.30, 0.45, 0.60, 0.75, 0.85])
+    return T2HTable(thetas, hits)
+
+
+# ---------------------------------------------------------------------------
+# cold-start lambda (regression: first wall-clock batch must not retune)
+# ---------------------------------------------------------------------------
+
+
+def test_first_batch_anchors_window_without_retune():
+    """_last_refresh defaulting to 0.0 made the very first wall-clock
+    batch satisfy t - 0 >= lambda_window and retune on a meaningless
+    lam = batch_size / window. The window must anchor at the first
+    observed arrival instead."""
+    dta = DynamicThreshold(_table(), slo_latency=0.2, llm_latency=1.0,
+                           lambda_window=10.0)
+    th0 = dta.theta
+    t0 = 5417.33                      # arbitrary perf_counter-style origin
+    dta.observe_arrivals(t0, 64)
+    assert dta.lam == 0.0             # no phantom retune
+    assert dta.theta == th0
+    assert dta._last_refresh == t0
+    # a full window after the anchor, lambda reflects the real rate
+    for k in range(1, 21):
+        dta.observe_arrivals(t0 + 0.5 * k, 1)
+    assert dta.lam == pytest.approx((64 + 20) / 10.0, rel=0.15)
+
+
+def test_lambda_window_anchored_at_first_arrival_not_zero():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.5,
+                           lambda_window=10.0)
+    dta.observe_arrivals(100.0, 4)
+    dta.observe_arrivals(109.9, 4)    # 9.9s after anchor: still in window
+    assert dta.lam == 0.0
+    dta.observe_arrivals(110.0, 4)    # window elapses -> first real retune
+    assert dta.lam > 0.0
+
+
+# ---------------------------------------------------------------------------
+# NoDTA theta stability (regression: retune overwrote the fixed theta)
+# ---------------------------------------------------------------------------
+
+
+def test_retune_disabled_keeps_configured_theta():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9,
+                           enabled=False)
+    dta.theta = 0.86                  # the configured fixed operating point
+    dta.lam = 50.0
+    assert dta.retune() == pytest.approx(0.86)
+    assert dta.theta == pytest.approx(0.86)
+
+
+def test_nodta_siso_reports_configured_theta_after_refresh(rng):
+    """A SISO-NoDTA refresh rebuilds T2H and calls retune(); the reported
+    operating point must stay the configured theta_r, not the table's
+    highest theta."""
+    siso = SISO(SISOConfig(dim=16, answer_dim=16, capacity=64,
+                           dynamic_threshold=False, theta_r=0.86))
+    vecs = _unit(rng, 60)
+    siso.bootstrap(vecs, vecs, answer_ids=np.arange(60))
+    assert siso.threshold.theta == pytest.approx(0.86)
+    assert siso.stats()["theta_r"] == pytest.approx(0.86)
+
+
+def test_feedback_disabled_records_but_does_not_shift():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9,
+                           enabled=False)
+    dta.theta = 0.86
+    dta.lam = 1.0
+    for _ in range(5):
+        dta.feedback(observed_wait=10.0)
+    assert dta.theta == pytest.approx(0.86)
+    assert dta._bias == 0
+    assert dta.n_feedback == 5        # telemetry still accumulates
+
+
+# ---------------------------------------------------------------------------
+# EMA service-time calibration
+# ---------------------------------------------------------------------------
+
+
+def test_first_observed_service_replaces_uncalibrated_guess():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=123.0)
+    dta.observe_service(0.4)
+    assert dta.llm_latency == pytest.approx(0.4)   # guess discarded
+    dta.observe_service(0.8)
+    assert 0.4 < dta.llm_latency < 0.8             # now EMA-smoothed
+
+
+def test_calibrate_seeds_then_ema_tracks():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=1.0,
+                           ema_alpha=0.5)
+    dta.calibrate(0.2)
+    assert dta.llm_latency == pytest.approx(0.2)
+    dta.observe_service(0.6)                       # EMA from the seed
+    assert dta.llm_latency == pytest.approx(0.4)
+    dta.observe_service(float("inf"))              # junk ignored
+    dta.observe_service(-1.0)
+    assert dta.llm_latency == pytest.approx(0.4)
+
+
+def test_observe_completion_feeds_both_feedback_and_ema():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    dta.lam = 1.0
+    th0 = dta.retune()
+    for _ in range(3):
+        dta.observe_completion(wait=5.0, service=0.9)
+    assert dta.theta < th0            # waits far above model -> bias up
+    assert dta.n_feedback == 3
+    assert dta.wait_error_stats()["n"] > 0
+
+
+# ---------------------------------------------------------------------------
+# spill-recency restore on repeat escape (regression)
+# ---------------------------------------------------------------------------
+
+
+def _spill_siso(rng, n_spill=3, d=16):
+    """SISO with an empty centroid region and n_spill spill rows."""
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=8,
+                           dynamic_threshold=False, theta_r=0.9))
+    vecs = _unit(rng, n_spill, d)
+    for k, v in enumerate(vecs):
+        siso.cache.insert_spill(v, v, answer_id=k)
+    return siso, vecs
+
+
+def test_repeat_escape_restores_spill_recency(rng):
+    siso, vecs = _spill_siso(rng)
+    cache = siso.cache
+    uid = np.asarray([7])
+    # first ask: legitimate spill hit, recency bump sticks
+    r1 = siso.handle_batch(vecs[0][None], now=0.0, user_ids=uid)
+    assert r1.hit[0] and r1.region[0] == 1
+    lru_after_first = cache._spill_last_use.copy()
+    # immediate same-user repeat: escaped -> the phantom hit's recency
+    # bump must be rolled back to the pre-lookup state
+    r2 = siso.handle_batch(vecs[0][None], now=1.0, user_ids=uid)
+    assert not r2.hit[0]
+    np.testing.assert_array_equal(cache._spill_last_use, lru_after_first)
+
+
+def test_escaped_repeat_does_not_shield_spill_row_from_eviction(rng):
+    """End to end: an escaped repeat must not keep its spill row warm.
+    Row 0 is asked once then escaped-repeatedly; row 1 and 2 are touched
+    legitimately afterwards; the next insert at capacity must evict row
+    0 (the true LRU), which the pre-fix recency pollution prevented."""
+    d = 16
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=3,
+                           dynamic_threshold=False, theta_r=0.9))
+    vecs = _unit(rng, 4, d)
+    for k in range(3):
+        siso.cache.insert_spill(vecs[k], vecs[k], answer_id=k)
+    uid = np.asarray([3])
+    siso.handle_batch(vecs[0][None], now=0.0, user_ids=uid)   # legit hit
+    siso.handle_batch(vecs[0][None], now=1.0, user_ids=uid)   # escaped
+    siso.handle_batch(vecs[0][None], now=2.0, user_ids=uid)   # escaped
+    siso.handle_batch(vecs[1][None], now=3.0, user_ids=np.asarray([4]))
+    siso.handle_batch(vecs[2][None], now=4.0, user_ids=np.asarray([5]))
+    siso.cache.insert_spill(vecs[3], vecs[3], answer_id=3)
+    res = siso.cache.lookup(vecs, theta_r=0.99, update_counts=False)
+    assert not res.hit[0]             # true LRU evicted
+    assert res.hit[1] and res.hit[2] and res.hit[3]
+
+
+def test_escape_keeps_legit_duplicate_recency_in_same_batch(rng):
+    """One batch hits the same spill row twice — one row escaped, one
+    legitimate. The surviving hit's recency must stand."""
+    siso, vecs = _spill_siso(rng)
+    cache = siso.cache
+    uid7 = np.asarray([7])
+    siso.handle_batch(vecs[0][None], now=0.0, user_ids=uid7)
+    before = cache._spill_last_use.copy()
+    # batch: [user 7 repeat (escaped), user 8 fresh ask (legit)] of row 0
+    res = siso.handle_batch(np.stack([vecs[0], vecs[0]]), now=1.0,
+                            user_ids=np.asarray([7, 8]))
+    assert not res.hit[0] and res.hit[1]
+    # recency moved FORWARD for the legit hit, not back to `before`
+    assert cache._spill_last_use[0] > before[0]
+
+
+def test_escape_stats_still_consistent(rng):
+    siso, vecs = _spill_siso(rng)
+    uid = np.asarray([7])
+    siso.handle_batch(vecs[0][None], now=0.0, user_ids=uid)
+    siso.handle_batch(vecs[0][None], now=1.0, user_ids=uid)
+    assert siso.cache.hits == 1 and siso.cache.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# VectorCache vectorized lookup (parity with the per-hit loop)
+# ---------------------------------------------------------------------------
+
+
+def test_vectorcache_lfu_counts_duplicates_in_batch(rng):
+    vc = VectorCache(16, 16, capacity=8, policy="lfu", theta_r=0.99)
+    v = _unit(rng, 2)
+    vc.insert(v[0], v[0], 0)
+    vc.insert(v[1], v[1], 1)
+    res = vc.lookup(np.stack([v[0], v[0], v[0], v[1]]))
+    assert res.hit.all()
+    assert vc.meta[0] == pytest.approx(4.0)    # 1 insert + 3 batch hits
+    assert vc.meta[1] == pytest.approx(2.0)
+
+
+def test_vectorcache_lru_duplicate_rows_keep_latest_tick(rng):
+    vc = VectorCache(16, 16, capacity=8, policy="lru", theta_r=0.99)
+    v = _unit(rng, 3)
+    for k in range(3):
+        vc.insert(v[k], v[k], k)
+    # batch order: row0, row2, row0 again -> recency order is 2 < 0
+    vc.lookup(np.stack([v[0], v[2], v[0]]))
+    assert vc.meta[0] > vc.meta[2] > vc.meta[1]
+
+
+def test_vectorcache_batch_lookup_matches_sequential(rng):
+    """The batched gather returns exactly what per-row lookups would."""
+    d = 16
+    base = _unit(rng, 12, d)
+    queries = np.concatenate([base[:6] + 0.02 * rng.normal(
+        size=(6, d)).astype(np.float32), _unit(rng, 4, d)])
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    batched = VectorCache(d, d, capacity=16, policy="lru", theta_r=0.9)
+    seq = VectorCache(d, d, capacity=16, policy="lru", theta_r=0.9)
+    for k, v in enumerate(base):
+        batched.insert(v, v, k)
+        seq.insert(v, v, k)
+    rb = batched.lookup(queries)
+    rows = [seq.lookup(q[None]) for q in queries]
+    np.testing.assert_array_equal(rb.hit, [r.hit[0] for r in rows])
+    np.testing.assert_array_equal(rb.answer_id,
+                                  [r.answer_id[0] for r in rows])
+    np.testing.assert_allclose(rb.answer,
+                               np.stack([r.answer[0] for r in rows]))
+    np.testing.assert_array_equal(batched.meta, seq.meta)
+    assert batched.hits == seq.hits and batched.misses == seq.misses
+
+
+# ---------------------------------------------------------------------------
+# workload scenario library
+# ---------------------------------------------------------------------------
+
+
+def test_scenarios_produce_valid_batches():
+    from repro.serving.workloads import SCENARIOS, build_scenario
+    for name in SCENARIOS:
+        s = build_scenario(name, n_train=120, n_test=40, seed=0)
+        assert len(s.test.vectors) == 40
+        assert len(s.train.vectors) == 120
+        assert (np.diff(s.test.arrivals) >= 0).all(), name
+        np.testing.assert_allclose(
+            np.linalg.norm(s.test.vectors, axis=1), 1.0, atol=1e-5)
+
+
+def test_topic_drift_phases_are_disjoint_from_history():
+    from repro.serving.workloads import build_scenario
+    s = build_scenario("topic_drift", n_train=120, n_test=60, seed=0,
+                       n_phases=3)
+    later = s.test.cluster_ids[s.extras["phase_starts"][1]:]
+    assert set(later).isdisjoint(set(s.train.cluster_ids))
+
+
+def test_repeat_heavy_revisits_personal_topics():
+    from repro.serving.workloads import build_scenario
+    s = build_scenario("repeat_heavy", n_train=120, n_test=80, seed=0,
+                       n_users=8, topics_per_user=3)
+    # at most 8*3 distinct topics across 80 asks -> heavy revisiting
+    assert len(np.unique(s.test.cluster_ids)) <= 24
+    assert len(np.unique(s.test.user_ids)) <= 8
+
+
+def test_bursty_rate_is_bimodal():
+    from repro.serving.workloads import build_scenario
+    s = build_scenario("bursty", n_train=120, n_test=300, seed=0, rps=10.0,
+                       period=6.0, duty=0.5)
+    gaps = np.diff(s.test.arrivals)
+    # burst gaps ~1/24s, floor gaps ~1/3s: both regimes must be present
+    assert (gaps < 1.0 / 15.0).sum() > 30
+    assert (gaps > 1.0 / 6.0).sum() > 10

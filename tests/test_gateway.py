@@ -253,6 +253,116 @@ def test_cold_start_refresh_floor(rng):
     assert siso.needs_refresh()
 
 
+class _VClock:
+    """Virtual clock the gateway/scheduler read; tests own .t."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_gateway_closed_loop_theta_adapts_and_recovers(rng, tiny_engine):
+    """The live control loop (DESIGN.md §7.1), end to end: observed waits
+    from real ContinuousBatchScheduler completions must (1) feed
+    DynamicThreshold.feedback() and lower theta_R under sustained
+    overload, (2) EMA-calibrate llm_latency off the bogus constructor
+    guess, and (3) let theta_R recover once load drops."""
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    engine, cfg = tiny_engine
+    d = 16
+    # llm_latency deliberately ~20x too small: the EMA must fix it
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=64,
+                           dynamic_threshold=True, theta_r=0.9),
+                slo_latency=0.3, llm_latency=0.01)
+    base = _unit(rng, 12, d)
+    hist = np.repeat(base, 8, axis=0) \
+        + 0.1 * rng.normal(size=(96, d)).astype(np.float32)
+    hist /= np.linalg.norm(hist, axis=1, keepdims=True)
+    siso.bootstrap(hist, hist, answer_ids=np.arange(96))
+    siso.threshold.lambda_window = 1.0
+    theta0 = siso.threshold.theta
+    clock = _VClock()
+    gw = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                        answer_fn=None, clock=clock, auto_refresh=False)
+    TICK = 0.05
+    toks = np.asarray([1, 2, 3], np.int32)
+
+    # -- overload: 48 cache-missing requests in 0.6 virtual seconds ------
+    fresh = _unit(rng, 48, d)
+    rid = 0
+    for k in range(0, 48, 4):
+        reqs = [GatewayRequest(rid=rid + j, model_tokens=toks,
+                               embed_tokens=fresh[k + j], max_new=4)
+                for j in range(4)]
+        rid += 4
+        gw.submit(reqs, now=clock.t)
+        clock.t += TICK
+    while gw.sched.queue or gw.sched.active:   # drain, time advancing
+        gw.step()
+        clock.t += TICK
+    thr = siso.threshold
+    assert thr.n_feedback > 0                  # scheduler fed the loop
+    assert thr._bias > 0                       # waits exceeded the model
+    theta_over = thr.theta
+    assert theta_over < theta0                 # overload lowered theta_R
+    assert 0.05 < thr.llm_latency < 1.0        # EMA left the 0.01 guess
+    rep = gw.report()
+    assert rep["slo_attainment"] < 1.0
+    assert rep["n_feedback"] == thr.n_feedback
+    assert len(rep["theta_trace"]) > 0
+
+    # -- recovery: light cache-friendly load -> bias decays, theta rises -
+    hot = siso.cache.centroids.vectors
+    for k in range(30):
+        clock.t += 0.5
+        gw.submit([GatewayRequest(rid=rid, model_tokens=toks,
+                                  embed_tokens=hot[k % len(hot)].copy(),
+                                  max_new=4)], now=clock.t)
+        rid += 1
+        while gw.sched.queue or gw.sched.active:
+            gw.step()
+            clock.t += TICK
+    assert siso.threshold.theta > theta_over   # operating point recovered
+    assert siso.threshold._bias == 0
+
+
+def test_gateway_baseline_frontends_run_the_same_path(rng, tiny_engine):
+    """NoCache / VectorCache drive the identical live pipeline (the
+    bench_slo comparison relies on this): misses flow through engine
+    slots, completions are recorded via insert(), report() works."""
+    from repro.serving.baselines import VectorCache
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    engine, cfg = tiny_engine
+    d = 16
+    vc = VectorCache(d, d, capacity=32, policy="lru", theta_r=0.9)
+    clock = _VClock()
+    gw = ServingGateway(vc, engine, embed_fn=lambda vs: np.stack(vs),
+                        clock=clock, slo_latency=10.0)
+    vecs = _unit(rng, 4, d)
+    reqs = [GatewayRequest(rid=i, model_tokens=np.asarray([1, 2, 3],
+                                                          np.int32),
+                           embed_tokens=vecs[i], max_new=4,
+                           answer_vec=vecs[i])
+            for i in range(4)]
+    hit = gw.submit(reqs, now=0.0)
+    assert not hit.any()
+    while gw.sched.queue or gw.sched.active:
+        gw.step()
+        clock.t += 0.05
+    # completions recorded into the vector cache -> exact re-asks hit
+    hit2 = gw.submit([GatewayRequest(rid=10 + i, model_tokens=np.asarray(
+        [1, 2, 3], np.int32), embed_tokens=vecs[i], max_new=4)
+        for i in range(4)], now=clock.t)
+    assert hit2.all()
+    rep = gw.report()
+    assert rep["completed"] == 8
+    assert rep["served_cache"] == 4 and rep["served_engine"] == 4
+    assert rep["slo_attainment"] == 1.0
+    assert rep["hit_ratio"] == pytest.approx(0.5)
+
+
 def test_gateway_repeat_escape(rng, tiny_engine):
     from repro.serving.gateway import GatewayRequest
     engine, cfg = tiny_engine
