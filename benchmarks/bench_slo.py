@@ -76,8 +76,13 @@ def make_frontend(kind: str, train: QueryBatch):
         bootstrap_frontend(fe, train)
         return fe
     assert kind == "siso"
+    # refresh_async=False: this harness measures cache *policy* under a
+    # virtual clock, where a synchronous refresh is free by construction;
+    # the incremental pipeline's wall-clock behavior is bench_refresh's
+    # subject (EXPERIMENTS.md §Refresh)
     cfg = SISOConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
-                     theta_r=THETA_R, dynamic_threshold=True)
+                     theta_r=THETA_R, dynamic_threshold=True,
+                     refresh_async=False)
     # llm_latency starts as a deliberately wrong guess: the live EMA
     # calibration must pull it to the engine's real (virtual) service time
     siso = SISO(cfg, slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)

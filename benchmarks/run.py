@@ -28,6 +28,7 @@ BENCHES = [
     "tab4_latency",         # Table 4 latency breakdown
     "roofline_report",      # EXPERIMENTS.md §Roofline table
     "bench_gateway",        # EXPERIMENTS.md §Gateway hot-path + e2e
+    "bench_refresh",        # EXPERIMENTS.md §Refresh non-blocking refresh
 ]
 
 

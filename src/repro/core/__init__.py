@@ -1,8 +1,9 @@
 from repro.core.cache_manager import CacheManager
+from repro.core.refresh import RefreshPipeline
 from repro.core.semantic_cache import SemanticCache
 from repro.core.siso import SISO, SISOConfig
 from repro.core.store import CentroidStore
 from repro.core.threshold import DynamicThreshold, T2HTable
 
-__all__ = ["CacheManager", "SemanticCache", "SISO", "SISOConfig",
-           "CentroidStore", "DynamicThreshold", "T2HTable"]
+__all__ = ["CacheManager", "RefreshPipeline", "SemanticCache", "SISO",
+           "SISOConfig", "CentroidStore", "DynamicThreshold", "T2HTable"]

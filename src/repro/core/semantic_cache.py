@@ -23,6 +23,15 @@ re-uploading the whole region. Threshold compare and answer gather are
 fused into the jitted top-1, so a batch lookup is one device round trip
 and the host does only O(hits) vectorized numpy bookkeeping — no per-hit
 Python loop anywhere on the serving path.
+
+Double-buffered refresh (DESIGN.md §10): an in-flight Algorithm-1 refresh
+stages its new centroid region into a *shadow* buffer
+(``begin_shadow``/``shadow_write``) while the live mirror keeps serving
+untouched; ``commit_shadow`` appends the surviving spill rows, uploads
+once, and atomically swaps the mirror pointer — the jitted top-1 never
+sees an invalidated or half-built matrix. Every mirror swap/rebuild bumps
+``generation``, which each LookupResult carries so callers can prove a
+batch was served from exactly one buffer.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.clustering import _pow2_pad
 from repro.core.store import CentroidStore
 
 
@@ -108,6 +118,8 @@ class LookupResult:
     answer_id: np.ndarray  # (B,) int64 (-1 on miss)
     entry: np.ndarray      # (B,) int64 row index (-1 on miss)
     region: np.ndarray     # (B,) int8: 0 centroid, 1 spill, -1 miss
+    generation: int = -1   # serving-state generation (DESIGN.md §10);
+                           # -1 for frontends without a device mirror
 
 
 class SemanticCache:
@@ -127,9 +139,15 @@ class SemanticCache:
         self.hits = 0
         self.misses = 0
         # observability: how many times the device mirror was rebuilt from
-        # scratch vs patched in place (bench_gateway reads these)
+        # scratch vs patched in place (bench_gateway reads these); dev_swaps
+        # counts double-buffered refresh commits (DESIGN.md §10)
         self.dev_rebuilds = 0
         self.dev_row_writes = 0
+        self.dev_swaps = 0
+        # bumped whenever a NEW device state starts serving (rebuild or
+        # shadow swap): lookups stamp it into LookupResult.generation
+        self.generation = 0
+        self._shadow: Optional[dict] = None
 
     # ----------------------------------------------------------------- state
 
@@ -142,13 +160,18 @@ class SemanticCache:
         store = store.copy()
         store.take(order)  # locality-first layout
         self.centroids = store
+        self._trim_spill()
+        self._invalidate()
+
+    def _trim_spill(self) -> None:
+        """LRU-evict spill rows that no longer fit the leftover capacity
+        (shared by the blocking set_centroids and the double-buffered
+        commit_shadow so both refresh paths trim identically)."""
         if len(self.spill) > self.spill_capacity:  # spill shrank
             drop = len(self.spill) - self.spill_capacity
-            keep = np.argsort(self._spill_last_use)[drop:]
-            keep = np.sort(keep)
+            keep = np.sort(np.argsort(self._spill_last_use)[drop:])
             self.spill.take(keep)
             self._spill_last_use = self._spill_last_use[keep]
-        self._invalidate()
 
     def apply_chunk(self, chunk: CentroidStore, first: bool) -> None:
         """Progressive update entry point (CacheManager.update_chunks)."""
@@ -174,7 +197,7 @@ class SemanticCache:
         if self._dev is None:
             nc = len(self.centroids)
             n = nc + len(self.spill)
-            pad = max(128, 1 << (n - 1).bit_length()) if n else 128
+            pad = _pow2_pad(n)
             mat = np.zeros((pad, self.dim), np.float32)
             ans = np.zeros((pad, self.answer_dim), np.float32)
             valid = np.zeros((pad,), bool)
@@ -192,7 +215,81 @@ class SemanticCache:
                                      jnp.asarray(valid), jnp.asarray(aid),
                                      pad)
             self.dev_rebuilds += 1
+            self.generation += 1
         return self._dev
+
+    # --------------------------------------------- double-buffered refresh
+
+    def begin_shadow(self, n_new: int) -> None:
+        """Open the shadow buffer for a refresh in flight (DESIGN.md §10).
+
+        The new centroid region (n_new rows, final locality-sorted order)
+        is staged here chunk by chunk via :meth:`shadow_write` while the
+        live device mirror keeps serving; one :meth:`commit_shadow` makes
+        it live. Sized with headroom for the spill rows that survive the
+        swap (regrown at commit if spill outgrew it meanwhile)."""
+        keep_spill = min(len(self.spill), max(0, self.capacity - n_new))
+        pad = _pow2_pad(n_new + keep_spill)
+        self._shadow = {
+            "mat": np.zeros((pad, self.dim), np.float32),
+            "ans": np.zeros((pad, self.answer_dim), np.float32),
+            "valid": np.zeros((pad,), bool),
+            "aid": np.full((pad,), -1, np.int32),
+            "n_new": n_new, "filled": 0}
+
+    def shadow_write(self, vectors: np.ndarray, answers: np.ndarray,
+                     answer_id: np.ndarray) -> None:
+        """Stage one bounded chunk of the new centroid region (host-side
+        memcpy — the live mirror is untouched)."""
+        sh = self._shadow
+        s, k = sh["filled"], len(vectors)
+        sh["mat"][s:s + k] = vectors
+        sh["ans"][s:s + k] = answers
+        sh["aid"][s:s + k] = answer_id
+        sh["valid"][s:s + k] = True
+        sh["filled"] = s + k
+
+    def commit_shadow(self, store: CentroidStore) -> None:
+        """Atomic swap ending a double-buffered refresh.
+
+        ``store`` must be the full new centroid region in final
+        locality-sorted order, with every row already staged through
+        :meth:`shadow_write`. Installs the store, LRU-trims the spill to
+        the new leftover capacity, appends the surviving spill rows, then
+        uploads once and swaps the mirror pointer — lookups either see the
+        complete old generation or the complete new one, never a partial
+        rebuild."""
+        sh = self._shadow
+        if sh is None or sh["filled"] != sh["n_new"] \
+                or sh["n_new"] != len(store):
+            raise ValueError("commit_shadow: shadow incomplete or store "
+                             "size mismatch")
+        self.centroids = store
+        self._trim_spill()
+        nc, ns = len(store), len(self.spill)
+        need = nc + ns
+        mat, ans, valid, aid = sh["mat"], sh["ans"], sh["valid"], sh["aid"]
+        if need > len(mat):      # spill grew past the headroom: regrow
+            pad = _pow2_pad(need)
+            mat2 = np.zeros((pad, self.dim), np.float32)
+            ans2 = np.zeros((pad, self.answer_dim), np.float32)
+            valid2 = np.zeros((pad,), bool)
+            aid2 = np.full((pad,), -1, np.int32)
+            mat2[:nc], ans2[:nc] = mat[:nc], ans[:nc]
+            valid2[:nc], aid2[:nc] = valid[:nc], aid[:nc]
+            mat, ans, valid, aid = mat2, ans2, valid2, aid2
+        if ns:
+            mat[nc:need] = self.spill.vectors
+            ans[nc:need] = self.spill.answers
+            aid[nc:need] = self.spill.answer_id
+            valid[nc:need] = True
+        self._dev = _DeviceState(jnp.asarray(mat), jnp.asarray(ans),
+                                 jnp.asarray(valid), jnp.asarray(aid),
+                                 len(mat))
+        self._hnsw = None        # graph path stays rebuild-based
+        self._shadow = None
+        self.generation += 1
+        self.dev_swaps += 1
 
     # ---------------------------------------------------------------- lookup
 
@@ -209,7 +306,8 @@ class SemanticCache:
                                 np.zeros((B, self.answer_dim), np.float32),
                                 np.full(B, -1, np.int64),
                                 np.full(B, -1, np.int64),
-                                np.full(B, -1, np.int8))
+                                np.full(B, -1, np.int8),
+                                generation=self.generation)
         if self.backend == "hnsw":
             sims, idx = self._hnsw_lookup(queries)
             hit = sims >= theta_r
@@ -255,7 +353,7 @@ class SemanticCache:
             self.misses += int(B - hit.sum())
         entry = np.where(hit, idx, -1).astype(np.int64)
         return LookupResult(hit, sims.astype(np.float32), answer, answer_id,
-                            entry, region)
+                            entry, region, generation=self.generation)
 
     def _host_gather(self, hit: np.ndarray, idx: np.ndarray, nc: int,
                      B: int) -> tuple[np.ndarray, np.ndarray]:

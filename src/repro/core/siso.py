@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.cache_manager import CacheManager, RefreshStats
 from repro.core.clustering import community_detection
+from repro.core.refresh import RefreshPipeline
 from repro.core.semantic_cache import LookupResult, SemanticCache
 from repro.core.store import CentroidStore
 from repro.core.threshold import DynamicThreshold, T2HTable
@@ -38,6 +39,12 @@ class SISOConfig:
     refresh_min: int = 32            # cold-start floor: an un-bootstrapped
                                      # system batches this much history
                                      # before its first clustering
+    refresh_async: bool = True       # serving-path refreshes run through
+                                     # the incremental RefreshPipeline
+                                     # (DESIGN.md §10); False falls back to
+                                     # the blocking refresh() per tick
+    refresh_budget_s: float = 0.002  # ~wall budget one refresh_tick() may
+                                     # spend advancing an in-flight cycle
 
 
 class SISO:
@@ -57,6 +64,8 @@ class SISO:
         self._log_vecs: list = []       # accumulating query log (online)
         self._log_answers: list = []
         self._initial_log_size = 0
+        self.pipeline = RefreshPipeline(self)   # DESIGN.md §10
+        self._sync_refreshes = 0                # blocking-path cycles
 
     # ----------------------------------------------------------------- online
 
@@ -122,15 +131,20 @@ class SISO:
         The batched lookup assigned ticks base+1+j to the j-th spill hit
         in batch order (duplicates keep the latest). An escaped row's
         recency reverts to its latest surviving tick from this batch, or
-        to its pre-lookup value when no legitimate hit touched it."""
+        to its pre-lookup value when no legitimate hit touched it. One
+        pass over spill_order builds the row -> latest-legit-tick map;
+        each escaped row then restores in O(1)."""
         base = self.cache._spill_clock - len(spill_order)
         escaped_pos = {b for b, _ in escaped_spill}
+        latest: dict[int, int] = {}
+        for j, p in enumerate(spill_order):
+            if p in escaped_pos:
+                continue
+            # ascending j: the last write per row is its latest tick
+            latest[int(res.entry[p]) - nc] = base + 1 + j
         for _, row in escaped_spill:
-            legit = [base + 1 + j for j, p in enumerate(spill_order)
-                     if p not in escaped_pos
-                     and int(res.entry[p]) - nc == row]
-            if legit:
-                self.cache._spill_last_use[row] = max(legit)
+            if row in latest:
+                self.cache._spill_last_use[row] = latest[row]
             elif prev_lru is not None and row < len(prev_lru):
                 self.cache._spill_last_use[row] = prev_lru[row]
 
@@ -148,6 +162,24 @@ class SISO:
         self._log_answers.append((np.asarray(answer, np.float32), answer_id))
         self.cache.insert_spill(vector, answer, answer_id)
 
+    def draw_t2h_sample(self, fresh_vectors: np.ndarray,
+                        rng: Optional[np.random.Generator] = None
+                        ) -> np.ndarray:
+        """§4.1: sample t2h_sample_frac of the fresh queries (deterministic
+        by default) — the single sampling rule shared by the blocking
+        refresh and the incremental pipeline's commit phase."""
+        rng = rng or np.random.default_rng(0)
+        n = max(1, int(self.cfg.t2h_sample_frac * len(fresh_vectors)))
+        sel = rng.choice(len(fresh_vectors), size=n, replace=False)
+        return fresh_vectors[sel]
+
+    @property
+    def refreshes_completed(self) -> int:
+        """Total finished refresh cycles, blocking + incremental — the
+        exact counter the gateway's refresh-cadence report keys on (a
+        single drain() can complete more than one cycle)."""
+        return self._sync_refreshes + self.pipeline.cycles
+
     def needs_refresh(self) -> bool:
         if self._initial_log_size == 0:
             # never bootstrapped: +10% of an empty history would refresh on
@@ -162,14 +194,19 @@ class SISO:
                          answer_ids: Optional[np.ndarray] = None
                          ) -> CentroidStore:
         """SISO-Cluster: log -> clusters -> repository centroids. The
-        representative's answer is stored with each centroid (§4.1)."""
+        representative's answer is stored with each centroid (§4.1).
+        One batched add (the seed's per-cluster loop re-concatenated the
+        whole store each step — quadratic in cluster count)."""
         clusters = community_detection(vectors, threshold=self.cfg.theta_c)
         repo = CentroidStore(self.cfg.dim, self.cfg.answer_dim)
-        for c in clusters:
-            aid = int(answer_ids[c.representative]) if answer_ids is not None \
-                else -1
-            repo.add(c.centroid, answers[c.representative], c.cluster_size,
-                     answer_id=aid)
+        if clusters:
+            reps = np.array([c.representative for c in clusters], np.int64)
+            repo.add(np.stack([c.centroid for c in clusters]),
+                     answers[reps],
+                     np.array([c.cluster_size for c in clusters],
+                              np.float64),
+                     answer_id=(answer_ids[reps]
+                                if answer_ids is not None else None))
         return repo
 
     def bootstrap(self, vectors: np.ndarray, answers: np.ndarray,
@@ -182,16 +219,79 @@ class SISO:
 
     def refresh(self, rng: Optional[np.random.Generator] = None
                 ) -> RefreshStats:
-        """Periodic re-clustering over newly accumulated queries (§4.1)."""
+        """Synchronous re-clustering over newly accumulated queries (§4.1).
+
+        Blocking reference path: an in-flight incremental cycle (if any)
+        is finished first, then the current log refreshes in one call.
+        The serving loop uses :meth:`refresh_tick` instead (DESIGN.md §10).
+        """
+        pending = self.pipeline.finish()
         if not self._log_vecs:
-            return RefreshStats()
+            return pending if pending is not None else RefreshStats()
+        vecs, answers, aids = self._snapshot_log()
+        repo = self.build_repository(vecs, answers, aids)
+        stats = self._refresh_from_repo(repo, vecs, None, rng)
+        if pending is not None:     # fold the finished in-flight cycle in
+            stats.merged += pending.merged
+            stats.added += pending.added
+            stats.evicted += pending.evicted
+        return stats
+
+    def _snapshot_log(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Consume the accumulated miss log: one refresh cycle's input."""
         vecs = np.stack(self._log_vecs)
         answers = np.stack([a for a, _ in self._log_answers])
         aids = np.array([i for _, i in self._log_answers], np.int64)
         self._initial_log_size += len(vecs)
         self._log_vecs, self._log_answers = [], []
-        repo = self.build_repository(vecs, answers, aids)
-        return self._refresh_from_repo(repo, vecs, None, rng)
+        return vecs, answers, aids
+
+    def refresh_tick(self, budget_s: Optional[float] = None
+                     ) -> Optional[RefreshStats]:
+        """Bounded refresh work for the serving loop (DESIGN.md §10).
+
+        Starts an incremental cycle when the log is due, else advances the
+        in-flight cycle by ~budget_s (default cfg.refresh_budget_s) of
+        bounded units — the hot path never stalls on a full re-cluster.
+        Returns the finished cycle's stats on its completing tick. With
+        cfg.refresh_async=False this degrades to the blocking refresh().
+        """
+        if not self.cfg.refresh_async:
+            if self.needs_refresh() and self._log_vecs:
+                return self.refresh()
+            return None
+        if self.pipeline.active:
+            return self.pipeline.step(self.cfg.refresh_budget_s
+                                      if budget_s is None else budget_s)
+        if self.needs_refresh() and self._log_vecs:
+            self._start_pipeline_from_log()
+        return None
+
+    def _start_pipeline_from_log(self) -> None:
+        """Consume the raw miss-log lists into a new pipeline cycle. O(1)
+        on the calling tick — the pipeline's first unit does the O(log)
+        stacking."""
+        vecs_l, answers_l = self._log_vecs, self._log_answers
+        self._initial_log_size += len(vecs_l)
+        self._log_vecs, self._log_answers = [], []
+        self.pipeline.start_from_log(vecs_l, answers_l)
+
+    def refresh_drain(self) -> Optional[RefreshStats]:
+        """Complete any due or in-flight refresh work (offline moment —
+        e.g. the gateway's drain()). Returns the last finished cycle's
+        stats, or None if nothing was due."""
+        out = None
+        if not self.cfg.refresh_async:
+            if self.needs_refresh() and self._log_vecs:
+                out = self.refresh()
+            return out
+        while self.pipeline.active or (self.needs_refresh()
+                                       and self._log_vecs):
+            if not self.pipeline.active:
+                self._start_pipeline_from_log()
+            stats = self.pipeline.finish()
+            out = stats if stats is not None else out
+        return out
 
     def _refresh_from_repo(self, repo: CentroidStore,
                            fresh_vectors: np.ndarray,
@@ -207,14 +307,12 @@ class SISO:
         self.cache.finish_update()
         # T2H from a 5% sample of the fresh queries
         if t2h_sample is None and len(fresh_vectors):
-            rng = rng or np.random.default_rng(0)
-            n = max(1, int(self.cfg.t2h_sample_frac * len(fresh_vectors)))
-            sel = rng.choice(len(fresh_vectors), size=n, replace=False)
-            t2h_sample = fresh_vectors[sel]
+            t2h_sample = self.draw_t2h_sample(fresh_vectors, rng)
         if t2h_sample is not None and len(t2h_sample):
             self.t2h = T2HTable.build(self.cache, t2h_sample)
             self.threshold.t2h = self.t2h
             self.threshold.retune()
+        self._sync_refreshes += 1
         return stats
 
     # --------------------------------------------------------------- metrics
@@ -233,4 +331,9 @@ class SISO:
             "predicted_wait": thr.predicted_wait(thr.theta),
             "wait_error": thr.wait_error_stats(),
             "n_feedback": thr.n_feedback,
+            # refresh pipeline observability (DESIGN.md §10)
+            "refresh_active": self.pipeline.active,
+            "refresh_cycles": self.pipeline.cycles,
+            "refresh_ticks": self.pipeline.ticks,
+            "mirror_generation": self.cache.generation,
         }

@@ -44,12 +44,22 @@ class T2HTable:
     def build(cls, cache, sample_vectors: np.ndarray,
               thetas: np.ndarray | None = None) -> "T2HTable":
         """One lookup pass gives best-sims; hit ratio per theta is a mean."""
-        thetas = (np.round(np.arange(0.98, 0.599, -0.02), 4)
-                  if thetas is None else np.asarray(thetas))
         if len(sample_vectors) == 0:
+            thetas = (np.round(np.arange(0.98, 0.599, -0.02), 4)
+                      if thetas is None else np.asarray(thetas))
             return cls(thetas, np.zeros_like(thetas))
         res = cache.lookup(sample_vectors, theta_r=-1.0, update_counts=False)
-        sims = res.sim
+        return cls.from_sims(res.sim, thetas)
+
+    @classmethod
+    def from_sims(cls, sims: np.ndarray,
+                  thetas: np.ndarray | None = None) -> "T2HTable":
+        """Table from pre-computed best-sims — the single source of the
+        theta grid and hit-ratio formula, shared by the synchronous build
+        and the incremental RefreshPipeline's blocked probes (so the two
+        paths can never drift apart)."""
+        thetas = (np.round(np.arange(0.98, 0.599, -0.02), 4)
+                  if thetas is None else np.asarray(thetas))
         hit = np.array([(sims >= t).mean() for t in thetas])
         return cls(thetas, hit)
 

@@ -12,7 +12,11 @@ examples used to hand-wire:
       --completion--> record_llm_answer (spill insert + offline log)
                       + observe_completion (wait feedback + L EMA,
                         DESIGN.md §7.1)
-      --every +refresh_frac new queries--> Algorithm-1 refresh
+      --every +refresh_frac new queries--> incremental Algorithm-1
+                      refresh: submit() advances the frontend's
+                      RefreshPipeline by one bounded budget slice per
+                      batch; drain() completes any in-flight cycle
+                      (DESIGN.md §10)
 
 The gateway is deliberately thin: the frontend owns cache policy, the
 scheduler owns slot management, and this class owns only batching, wiring,
@@ -113,6 +117,16 @@ class ServingGateway:
                                               answer_fn=answer_fn,
                                               clock=self.clock)
         self.stats = GatewayStats()
+        # running completion counters: report() ingests only the done-list
+        # suffix it has not seen yet, so per-call cost stays O(new + window)
+        # instead of rescanning every completion since process start
+        self._done_cursor = 0
+        self._served = {"cache": 0, "engine": 0}
+        self._eng_wait_sum = 0.0
+        self._eng_wait_n = 0
+        self._eng_waits: deque = deque(maxlen=STATS_WINDOW)
+        self._slo_ok = 0
+        self._slo_n = 0
 
     # ------------------------------------------------------------------ api
 
@@ -169,10 +183,11 @@ class ServingGateway:
 
     def drain(self, max_ticks: int = 10_000) -> list[Request]:
         """Run the engine until every queued miss has completed; returns all
-        finished requests (cache hits included), then refreshes if due.
+        finished requests (cache hits included), then completes any due or
+        in-flight refresh (an offline moment — no request is waiting).
         Per-path serving counts live in report(), derived from done."""
         out = self.sched.drain(max_ticks)
-        self._maybe_refresh()
+        self._maybe_refresh(drain=True)
         return out
 
     @property
@@ -181,36 +196,71 @@ class ServingGateway:
 
     # ------------------------------------------------------------- internal
 
-    def _maybe_refresh(self) -> None:
-        if (self.auto_refresh and hasattr(self.frontend, "needs_refresh")
-                and self.frontend.needs_refresh()):
-            self.frontend.refresh()
+    def _maybe_refresh(self, drain: bool = False) -> None:
+        """Advance the frontend's refresh machinery (DESIGN.md §10).
+
+        On the hot path (submit) a RefreshPipeline frontend gets exactly
+        one bounded refresh_tick(); on drain it runs to completion. A
+        frontend without refresh_tick keeps the legacy blocking behavior.
+        """
+        if not self.auto_refresh:
+            return
+        fe = self.frontend
+        if hasattr(fe, "refresh_tick"):
+            before = getattr(fe, "refreshes_completed", None)
+            # a duck-typed frontend may implement only refresh_tick; the
+            # bounded tick is then the drain-path fallback too
+            drain_fn = getattr(fe, "refresh_drain", fe.refresh_tick)
+            stats = drain_fn() if drain else fe.refresh_tick()
+            if before is not None:
+                # exact: one drain can complete more than one cycle
+                self.stats.refreshes += fe.refreshes_completed - before
+            elif stats is not None:
+                self.stats.refreshes += 1
+        elif hasattr(fe, "needs_refresh") and fe.needs_refresh():
+            fe.refresh()
             self.stats.refreshes += 1
 
     # --------------------------------------------------------------- report
 
+    def _ingest_done(self) -> None:
+        """Fold completions the running counters have not seen yet. Sums
+        and SLO attainment are exact over the lifetime; p99_wait is over
+        the recent STATS_WINDOW engine completions (the gateway is a
+        long-lived serving object — a full-history percentile would cost
+        O(completed) per report call)."""
+        done = self.sched.done
+        for r in done[self._done_cursor:]:
+            wait = r.t_done - r.t_submit
+            self._served[r.served_by] += 1
+            if r.served_by == "engine":
+                self._eng_wait_sum += wait
+                self._eng_wait_n += 1
+                self._eng_waits.append(wait)
+            if self.slo_latency is not None:
+                self._slo_n += 1
+                self._slo_ok += int(wait <= self.slo_latency)
+        self._done_cursor = len(done)
+
     def report(self) -> dict:
         s = self.frontend.stats() if hasattr(self.frontend, "stats") else {}
-        done = self.sched.done
+        self._ingest_done()
         rep = {
             **s,
             "submitted": self.stats.submitted,
-            "completed": len(done),
-            "served_cache": sum(r.served_by == "cache" for r in done),
-            "served_engine": sum(r.served_by == "engine" for r in done),
+            "completed": self._done_cursor,
+            "served_cache": self._served["cache"],
+            "served_engine": self._served["engine"],
             "refreshes": self.stats.refreshes,
             "lookup": self.stats.lookup_percentiles(),
         }
-        waits = np.asarray([r.t_done - r.t_submit for r in done])
-        eng_waits = np.asarray([r.t_done - r.t_submit for r in done
-                                if r.served_by == "engine"])
-        if len(eng_waits):
-            rep["mean_wait"] = float(eng_waits.mean())
-            rep["p99_wait"] = float(np.percentile(eng_waits, 99))
-        if self.slo_latency is not None and len(waits):
+        if self._eng_wait_n:
+            rep["mean_wait"] = self._eng_wait_sum / self._eng_wait_n
+            rep["p99_wait"] = float(np.percentile(
+                np.asarray(self._eng_waits), 99))
+        if self.slo_latency is not None and self._slo_n:
             rep["slo_latency"] = float(self.slo_latency)
-            rep["slo_attainment"] = float(
-                (waits <= self.slo_latency).mean())
+            rep["slo_attainment"] = self._slo_ok / self._slo_n
         if self.stats.theta_trace:
             rep["theta_trace"] = [list(p) for p in self.stats.theta_trace]
         thr = getattr(self.frontend, "threshold", None)

@@ -1,0 +1,392 @@
+"""Non-blocking refresh pipeline + vectorized offline path (DESIGN.md §10).
+
+Three equivalence families the tentpole must preserve:
+  (a) the incremental RefreshPipeline converges to the same state as the
+      synchronous SISO.refresh() over the same log snapshot;
+  (b) the vectorized community_detection / merge_centroids /
+      intra_cluster_stats match the seed reference implementations on
+      randomized inputs;
+  (c) lookups issued mid-refresh are served from exactly one device-mirror
+      generation (whole old buffer until the swap, whole new buffer after).
+"""
+import numpy as np
+import pytest
+
+from repro.core.cache_manager import (MergePlanner, merge_centroids,
+                                      merge_centroids_reference)
+from repro.core.clustering import (CommunityDetector, community_detection,
+                                   community_detection_reference,
+                                   intra_cluster_stats,
+                                   intra_cluster_stats_reference,
+                                   neighbor_counts,
+                                   _neighbor_counts_reference)
+from repro.core.semantic_cache import SemanticCache
+from repro.core.siso import SISO, SISOConfig
+from repro.core.store import CentroidStore
+
+
+def _unit(rng, n, d=16):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+
+
+def _clustered(rng, n_topics, per, d=16, noise=0.08):
+    base = _unit(rng, n_topics, d)
+    v = np.repeat(base, per, axis=0) \
+        + noise * rng.normal(size=(n_topics * per, d)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _assert_clusters_equal(ref, new, emb):
+    assert len(ref) == len(new)
+    for a, b in zip(ref, new):
+        assert np.array_equal(np.sort(a.members), np.sort(b.members))
+        assert a.cluster_size == b.cluster_size
+        np.testing.assert_allclose(a.centroid, b.centroid, atol=1e-5)
+        # the representative must be a member whose dot with the centroid
+        # is within float noise of the max (for 2-member clusters the two
+        # dots are mathematically equal, so exact index equality is
+        # noise-determined in BOTH implementations)
+        assert b.representative in b.members
+        dots = emb[a.members] @ a.centroid
+        assert float(emb[b.representative] @ a.centroid) \
+            >= dots.max() - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# (b) vectorized offline path == seed reference
+# ---------------------------------------------------------------------------
+
+
+def test_neighbor_counts_match_reference(rng):
+    for n, d, theta in [(1, 4, 0.86), (100, 8, 0.7), (300, 16, 0.86)]:
+        emb = _unit(rng, n, d)
+        np.testing.assert_array_equal(
+            neighbor_counts(emb, theta),
+            _neighbor_counts_reference(emb, theta))
+
+
+@pytest.mark.parametrize("case", ["random", "clustered", "tight"])
+def test_community_detection_matches_reference(rng, case):
+    if case == "random":
+        emb, theta = _unit(rng, 250, 12), 0.75
+    elif case == "clustered":
+        emb, theta = _clustered(rng, 12, 8), 0.86
+    else:
+        emb, theta = _clustered(rng, 6, 20, noise=0.02), 0.9
+    ref = community_detection_reference(emb, threshold=theta)
+    new = community_detection(emb, threshold=theta)
+    _assert_clusters_equal(ref, new, emb)
+
+
+def test_community_detection_min_size_matches_reference(rng):
+    emb = _clustered(rng, 10, 5)
+    for mcs in (2, 4):
+        ref = community_detection_reference(emb, threshold=0.86,
+                                            min_community_size=mcs)
+        new = community_detection(emb, threshold=0.86,
+                                  min_community_size=mcs)
+        _assert_clusters_equal(ref, new, emb)
+
+
+def test_incremental_detector_matches_run(rng):
+    """Tiny-block single-unit stepping == run-to-completion semantics."""
+    emb = _clustered(rng, 8, 9)
+    det = CommunityDetector(emb, threshold=0.86, count_block=16,
+                            seed_block=8, scan_rows=3, finalize_rows=16,
+                            fused_counts=False)
+    units = 0
+    while det.step(0.0):
+        units += 1
+    ref = community_detection_reference(emb, threshold=0.86)
+    _assert_clusters_equal(ref, det.result(), emb)
+    assert units > 5          # it really was incremental
+
+
+def _store(v, sizes, d):
+    st = CentroidStore(d, d)
+    if len(v):
+        st.add(v, v, sizes, answer_id=np.arange(len(v)))
+    return st
+
+
+def test_merge_centroids_matches_reference_randomized(rng):
+    for _ in range(15):
+        d = int(rng.integers(4, 20))
+        n, r = int(rng.integers(0, 30)), int(rng.integers(0, 40))
+        theta = float(rng.uniform(0.5, 0.95))
+        cv, rv = _unit(rng, n, d), _unit(rng, r, d)
+        if r > 4 and n > 2:       # force absorb + intra-repo dedup paths
+            rv[0] = cv[0]
+            rv[1] = rv[2]
+        cur = _store(cv, rng.uniform(1, 50, n), d)
+        repo = _store(rv, rng.uniform(1, 50, r), d)
+        m_ref, s_ref = merge_centroids_reference(cur.copy(), repo, theta)
+        m_new, s_new = merge_centroids(cur.copy(), repo, theta)
+        assert (s_ref.merged, s_ref.added) == (s_new.merged, s_new.added)
+        np.testing.assert_array_equal(m_ref.vectors, m_new.vectors)
+        np.testing.assert_allclose(m_ref.cluster_size, m_new.cluster_size,
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(m_ref.answer_id, m_new.answer_id)
+        np.testing.assert_array_equal(m_ref.ids, m_new.ids)
+        np.testing.assert_array_equal(np.isinf(m_ref.access_count),
+                                      np.isinf(m_new.access_count))
+
+
+def test_merge_planner_stepping_matches_run(rng):
+    cv, rv = _unit(rng, 20, 8), _unit(rng, 35, 8)
+    cur = _store(cv, rng.uniform(1, 9, 20), 8)
+    repo = _store(rv, rng.uniform(1, 9, 35), 8)
+    ref, _ = merge_centroids_reference(cur.copy(), repo, 0.6)
+    p = MergePlanner(cur.copy(), repo, 0.6, block=4)
+    units = 0
+    while p.step(0.0):
+        units += 1
+    out, _ = p.result()
+    np.testing.assert_array_equal(ref.vectors, out.vectors)
+    np.testing.assert_allclose(ref.cluster_size, out.cluster_size,
+                               rtol=1e-6)
+    assert units > 5
+
+
+def test_intra_cluster_stats_matches_reference(rng):
+    emb = _clustered(rng, 10, 12)
+    clusters = community_detection(emb, threshold=0.86)
+    ref = intra_cluster_stats_reference(emb, clusters)
+    new = intra_cluster_stats(emb, clusters)
+    np.testing.assert_allclose(new, ref, atol=1e-5)
+    # all-singleton degenerate case
+    lone = community_detection(_unit(rng, 20, 16), threshold=0.999)
+    assert intra_cluster_stats(_unit(rng, 20, 16), lone) == (1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# (a) + (c): pipeline equivalence and mid-refresh buffer consistency
+# ---------------------------------------------------------------------------
+
+
+def _mini_siso(rng, refresh_async, capacity=64):
+    siso = SISO(SISOConfig(dim=16, answer_dim=16, capacity=capacity,
+                           dynamic_threshold=True,
+                           refresh_async=refresh_async))
+    hist = _clustered(rng, 20, 15)
+    siso.bootstrap(hist, hist, answer_ids=np.arange(len(hist)))
+    return siso
+
+
+def test_pipeline_converges_to_sync_refresh(rng):
+    sync = _mini_siso(np.random.default_rng(0), refresh_async=False)
+    inc = _mini_siso(np.random.default_rng(0), refresh_async=True)
+    fresh = _unit(rng, 40)
+    for v in fresh:
+        sync.record_llm_answer(v, v)
+        inc.record_llm_answer(v, v)
+    stats_sync = sync.refresh()
+    assert inc.needs_refresh()
+    stats_inc, ticks = None, 0
+    while stats_inc is None and ticks < 10_000:
+        stats_inc = inc.refresh_tick(budget_s=0.0)
+        ticks += 1
+    assert ticks > 3                       # genuinely incremental
+    assert (stats_sync.merged, stats_sync.added, stats_sync.evicted) \
+        == (stats_inc.merged, stats_inc.added, stats_inc.evicted)
+    np.testing.assert_array_equal(sync.cache.centroids.vectors,
+                                  inc.cache.centroids.vectors)
+    np.testing.assert_array_equal(sync.cache.centroids.ids,
+                                  inc.cache.centroids.ids)
+    np.testing.assert_allclose(sync.cache.centroids.cluster_size,
+                               inc.cache.centroids.cluster_size, rtol=1e-9)
+    np.testing.assert_allclose(sync.t2h.hit_ratios, inc.t2h.hit_ratios,
+                               atol=1e-9)
+    assert sync._initial_log_size == inc._initial_log_size
+    assert sync.theta_r == inc.theta_r
+    assert len(inc._log_vecs) == 0
+    probe = _unit(rng, 50)
+    ra = sync.cache.lookup(probe, theta_r=0.86, update_counts=False)
+    rb = inc.cache.lookup(probe, theta_r=0.86, update_counts=False)
+    np.testing.assert_array_equal(ra.hit, rb.hit)
+    np.testing.assert_array_equal(ra.entry, rb.entry)
+    np.testing.assert_allclose(ra.sim, rb.sim, atol=1e-6)
+
+
+def test_mid_refresh_lookups_one_buffer_generation(rng):
+    siso = _mini_siso(rng, refresh_async=True)
+    for v in _unit(rng, 40):
+        siso.record_llm_answer(v, v)
+    probe = _unit(rng, 25)
+    pre = siso.cache.lookup(probe, theta_r=0.86, update_counts=False)
+    gen0 = siso.cache.generation
+    done = None
+    while done is None:
+        done = siso.refresh_tick(budget_s=0.0)
+        if not siso.pipeline.active:
+            break
+        r = siso.cache.lookup(probe, theta_r=0.86, update_counts=False)
+        if siso.pipeline.phase in ("snapshot", "cluster", "plan", "apply",
+                                   "commit"):
+            # before the swap: the whole OLD buffer, bit-identical results
+            assert r.generation == gen0
+            np.testing.assert_array_equal(r.hit, pre.hit)
+            np.testing.assert_array_equal(r.entry, pre.entry)
+            np.testing.assert_array_equal(r.sim, pre.sim)
+        else:                    # t2h: after the swap, the whole NEW buffer
+            assert r.generation == gen0 + 1
+    assert siso.cache.generation == gen0 + 1
+    assert siso.cache.dev_swaps == 1
+    post = siso.cache.lookup(probe, theta_r=0.86, update_counts=False)
+    assert post.generation == gen0 + 1
+
+
+def test_spill_inserts_during_refresh_survive_the_swap(rng):
+    siso = _mini_siso(rng, refresh_async=True)
+    for v in _unit(rng, 40):
+        siso.record_llm_answer(v, v)
+    mid = _unit(rng, 3)
+    inserted = False
+    done = None
+    while done is None:
+        done = siso.refresh_tick(budget_s=0.0)
+        if siso.pipeline.phase == "apply" and not inserted:
+            # a miss completes while chunks are being staged: it patches
+            # the LIVE mirror now and must survive into the new buffer
+            for k, v in enumerate(mid):
+                siso.cache.insert_spill(v, v, answer_id=500 + k)
+            inserted = True
+    assert inserted
+    res = siso.cache.lookup(mid, theta_r=0.99, update_counts=False)
+    assert res.hit.all()
+    assert np.array_equal(res.answer_id, [500, 501, 502])
+    # and the mid-flight misses belong to the NEXT cycle's log, untouched
+    assert len(siso._log_vecs) == 0
+
+
+def test_access_counts_accrued_mid_refresh_carry_into_new_store(rng):
+    """Hits landing while a cycle is in flight keep counting: the commit
+    folds the live store's access-count delta into the surviving
+    centroids (matched by stable id), so in-flight popularity still
+    influences the NEXT refresh's eviction sort."""
+    siso = _mini_siso(rng, refresh_async=True)
+    for v in _unit(rng, 40):
+        siso.record_llm_answer(v, v)
+    hot = siso.cache.centroids.vectors[0].copy()
+    hits_mid = 0
+    done = None
+    while done is None:
+        done = siso.refresh_tick(budget_s=0.0)
+        if siso.pipeline.phase in ("cluster", "plan", "apply"):
+            res = siso.cache.lookup(hot[None], theta_r=0.86)  # counts!
+            hits_mid += int(res.hit[0] and res.region[0] == 0)
+    assert hits_mid > 0
+    # a merged centroid keeps its exact vector through Algorithm 1; find
+    # it in the new store by content (the rebuild assigns fresh ids)
+    new = siso.cache.centroids
+    row = np.flatnonzero((new.vectors == hot).all(axis=1))
+    assert len(row) == 1
+    assert new.access_count[row[0]] == hits_mid
+
+
+def test_commit_shadow_rejects_incomplete_stage(rng):
+    cache = SemanticCache(16, 16, capacity=64)
+    store = CentroidStore(16, 16)
+    store.add(_unit(rng, 8), _unit(rng, 8), np.ones(8))
+    cache.begin_shadow(8)
+    cache.shadow_write(store.vectors[:4], store.answers[:4],
+                       store.answer_id[:4])
+    with pytest.raises(ValueError, match="shadow incomplete"):
+        cache.commit_shadow(store)
+
+
+# ---------------------------------------------------------------------------
+# gateway integration: refresh completes through submit ticks alone
+# ---------------------------------------------------------------------------
+
+
+class _StubEngine:
+    """Engine stand-in for hit-only streams: never offers a slot, so the
+    scheduler leaves it untouched (no miss ever reaches it)."""
+    n_slots = 1
+
+    def free_slots(self):
+        return []
+
+
+def test_gateway_submits_advance_refresh_without_drain(rng):
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    siso = _mini_siso(rng, refresh_async=True)
+    # inject a due log directly (as if misses had completed earlier)
+    for v in _unit(rng, 40):
+        siso._log_vecs.append(v)
+        siso._log_answers.append((v, -1))
+    gw = ServingGateway(siso, _StubEngine(),
+                        embed_fn=lambda vs: np.stack(vs), answer_fn=None)
+    hot = siso.cache.centroids.vectors
+    toks = np.asarray([1, 2, 3], np.int32)
+    n_sub = 0
+    while gw.stats.refreshes == 0 and n_sub < 10_000:
+        reqs = [GatewayRequest(rid=n_sub * 4 + j, model_tokens=toks,
+                               embed_tokens=hot[(n_sub * 4 + j) % len(hot)]
+                               .copy(), max_new=2) for j in range(4)]
+        hit = gw.submit(reqs)
+        assert hit.all()                  # hot stream: engine never needed
+        n_sub += 1
+    assert gw.stats.refreshes == 1
+    assert not siso.pipeline.active
+    assert n_sub > 1                      # spread across several submits
+    rep = gw.report()
+    assert rep["refresh_cycles"] == 1
+    assert rep["served_cache"] == rep["completed"] == n_sub * 4
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: spill-recency map + running report counters
+# ---------------------------------------------------------------------------
+
+
+def test_restore_spill_recency_linear_map_matches_reference(rng):
+    """The precomputed row->latest-legit-tick map must reproduce the seed's
+    per-escape rescan semantics: an escaped row keeps its latest surviving
+    tick from the batch, else reverts to its pre-lookup recency."""
+    d = 16
+    cfg = SISOConfig(dim=d, answer_dim=d, capacity=8,
+                     dynamic_threshold=False, repeat_sim=0.99)
+    siso = SISO(cfg)
+    v = _unit(rng, 3, d)
+    for k, vec in enumerate(v):
+        siso.cache.insert_spill(vec, vec, answer_id=k)
+    lru_before = siso.cache._spill_last_use.copy()
+    users = np.asarray([7, 8, 9])
+    siso.handle_batch(v, now=0.0, user_ids=users)      # prime repeats
+    lru_mid = siso.cache._spill_last_use.copy()
+    # same users repeat rows 0 and 2 (escape); user 5 legitimately hits
+    # row 0 in the same batch -> row 0 keeps user 5's tick, row 2 reverts
+    batch = np.stack([v[0], v[2], v[0]])
+    res = siso.handle_batch(batch, now=1.0,
+                            user_ids=np.asarray([7, 9, 5]))
+    assert not res.hit[0] and not res.hit[1] and res.hit[2]
+    lru = siso.cache._spill_last_use
+    assert lru[0] > lru_mid[0]            # user 5's legit tick survived
+    assert lru[2] == lru_mid[2]           # escaped-only row reverted
+
+
+def test_report_running_counters_match_full_recompute(rng):
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    siso = _mini_siso(rng, refresh_async=True)
+    gw = ServingGateway(siso, _StubEngine(),
+                        embed_fn=lambda vs: np.stack(vs), answer_fn=None,
+                        slo_latency=10.0, auto_refresh=False)
+    hot = siso.cache.centroids.vectors
+    toks = np.asarray([1, 2, 3], np.int32)
+    for k in range(6):
+        gw.submit([GatewayRequest(rid=k, model_tokens=toks,
+                                  embed_tokens=hot[k % len(hot)].copy(),
+                                  max_new=2)])
+        rep = gw.report()                 # interleaved calls stay exact
+        done = gw.sched.done
+        assert rep["completed"] == len(done)
+        assert rep["served_cache"] == sum(r.served_by == "cache"
+                                          for r in done)
+        assert rep["served_engine"] == sum(r.served_by == "engine"
+                                           for r in done)
+        waits = np.asarray([r.t_done - r.t_submit for r in done])
+        assert rep["slo_attainment"] == pytest.approx(
+            float((waits <= 10.0).mean()))
