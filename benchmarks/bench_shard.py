@@ -1,0 +1,193 @@
+"""Sharded cache plane benchmark (EXPERIMENTS.md §Shard, DESIGN.md §11).
+
+Two measurements on a forced 8-device host (the bench re-execs itself
+with XLA_FLAGS=--xla_force_host_platform_device_count=8 when the current
+process sees fewer devices — jax device count is fixed at import):
+
+1. **Capacity scaling** — hold the per-shard row budget fixed and grow
+   the shard count: total resident rows must scale ~linearly with S
+   while per-shard device bytes (the HBM-per-device proxy) stay flat.
+   This is the point of the plane: cache capacity is no longer bounded
+   by one device's memory.
+
+2. **Lookup latency vs shard count** — batched top-1 over a *fixed*
+   total corpus split S ways: shard-local fused top-1 + cross-shard
+   argmax. On a real mesh the local matmul shrinks by S and the
+   collective moves O(B*S) scalars; on the CPU host this measures the
+   plane's overhead honestly (forced host devices share the same
+   silicon, so no speedup is asserted — the numbers exist to catch
+   regressions in the sharded dispatch itself).
+
+Every configuration is also checked element-wise against the 1-device
+reference (hit mask, sims, answers) — a wrong answer fails the bench
+regardless of speed.
+
+Writes results/BENCH_shard.json. Full mode asserts linear capacity
+scaling and equivalence; --smoke runs tiny sizes without assertions
+(the CI regression gate compares the JSON against a committed baseline
+via tools/check_bench_regression.py).
+
+  PYTHONPATH=src python -m benchmarks.bench_shard [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+DIM = 64
+ANSWER_DIM = 64
+BATCH = 64
+SHARD_COUNTS = [1, 2, 4, 8]
+_INNER_ENV = "_BENCH_SHARD_INNER"
+
+
+def _reexec_with_devices(smoke: bool, n: int = 8) -> int:
+    """jax fixes the device count at backend init, so the measurement
+    runs in a child process with the forced-host-device flag set."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env[_INNER_ENV] = "1"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
+        + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, os.path.abspath(__file__)]
+    if smoke:
+        cmd.append("--smoke")
+    return subprocess.run(cmd, env=env).returncode
+
+
+def _corpus(rng, n):
+    v = rng.normal(size=(n, DIM)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _make_cache(n_shards: int, capacity: int):
+    from repro.core.semantic_cache import SemanticCache
+    from repro.distributed.cache_plane import ShardedCacheConfig
+    shard = ShardedCacheConfig(n_shards=n_shards) if n_shards > 1 else None
+    return SemanticCache(DIM, ANSWER_DIM, capacity=capacity, shard=shard)
+
+
+def _fill(cache, vecs):
+    from repro.core.store import CentroidStore
+    st = CentroidStore(DIM, ANSWER_DIM)
+    st.add(vecs, vecs, np.arange(len(vecs), 0, -1, dtype=np.float64),
+           answer_id=np.arange(len(vecs)))
+    cache.set_centroids(st)
+
+
+def bench_capacity(per_shard_rows: int) -> list[dict]:
+    """Fixed per-shard budget, growing shard count -> linear total rows."""
+    rng = np.random.default_rng(0)
+    out = []
+    for S in SHARD_COUNTS:
+        n = per_shard_rows * S
+        cache = _make_cache(S, capacity=n)
+        _fill(cache, _corpus(rng, n))
+        cache.lookup(_corpus(rng, 4), 0.9, update_counts=False)  # build
+        dev = cache._dev
+        per_shard_bytes = (dev.nbytes_per_shard() if S > 1 else
+                           (dev.mat.nbytes + dev.ans.nbytes
+                            + dev.valid.nbytes + dev.aid.nbytes))
+        row = {"n_shards": S, "resident_rows": int(n),
+               "rows_capacity": int(dev.rows),
+               "per_shard_rows": int(dev.rows // S),
+               "per_shard_bytes": int(per_shard_bytes)}
+        print(f"  S={S}  resident={n:>6} rows  addressable={dev.rows:>6}  "
+              f"per-shard={row['per_shard_rows']:>6} rows "
+              f"({per_shard_bytes / 1e6:6.2f} MB/shard)")
+        out.append(row)
+    return out
+
+
+def bench_latency(total_rows: int, reps: int) -> list[dict]:
+    """Fixed total corpus split S ways; p50/p99 batched lookup latency
+    plus element-wise equivalence vs the 1-device reference."""
+    rng = np.random.default_rng(1)
+    vecs = _corpus(rng, total_rows)
+    queries = _corpus(rng, BATCH)
+    queries[: BATCH // 4] = vecs[rng.integers(0, total_rows, BATCH // 4)]
+    ref = _make_cache(1, capacity=total_rows)
+    _fill(ref, vecs)
+    r_ref = ref.lookup(queries, 0.9, update_counts=False)
+    out = []
+    for S in SHARD_COUNTS:
+        cache = _make_cache(S, capacity=total_rows)
+        _fill(cache, vecs)
+        res = cache.lookup(queries, 0.9, update_counts=False)  # warm + jit
+        equal = all(np.array_equal(getattr(r_ref, f), getattr(res, f))
+                    for f in ("hit", "sim", "answer", "answer_id", "entry"))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            cache.lookup(queries, 0.9, update_counts=False)
+            ts.append(time.perf_counter() - t0)
+        ts = np.asarray(ts) * 1e3
+        row = {"n_shards": S, "total_rows": int(total_rows),
+               "batch": BATCH,
+               "p50_ms": float(np.percentile(ts, 50)),
+               "p99_ms": float(np.percentile(ts, 99)),
+               "equal_to_reference": bool(equal)}
+        print(f"  S={S}  p50={row['p50_ms']:7.3f}ms  "
+              f"p99={row['p99_ms']:7.3f}ms  exact={equal}")
+        out.append(row)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, no acceptance assertions")
+    # parse_known_args: benchmarks.run invokes main() with its own argv
+    args, _ = ap.parse_known_args()
+
+    if os.environ.get(_INNER_ENV) != "1":
+        import jax
+        if jax.device_count() < max(SHARD_COUNTS):
+            print(f"re-exec with {max(SHARD_COUNTS)} forced host devices")
+            return _reexec_with_devices(args.smoke)
+
+    per_shard, total, reps = ((128, 512, 10) if args.smoke
+                              else (1024, 4096, 50))
+    print("capacity scaling (fixed per-shard budget):")
+    cap = bench_capacity(per_shard)
+    print("lookup latency vs shard count (fixed total corpus):")
+    lat = bench_latency(total, reps)
+    payload = {"capacity": cap, "latency": lat, "dim": DIM,
+               # machine-independent dispatch-overhead ratio: max-shard p50
+               # over single-shard p50 on the same host (the gate metric —
+               # absolute ms vary across CI runners, the ratio does not)
+               "s_max_over_s1_p50": lat[-1]["p50_ms"] / lat[0]["p50_ms"],
+               "smoke": bool(args.smoke)}
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "BENCH_shard.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+
+    assert all(r["equal_to_reference"] for r in lat), \
+        "sharded lookup diverged from the 1-device reference"
+    if not args.smoke:
+        base = cap[0]
+        for r in cap[1:]:
+            S = r["n_shards"]
+            ratio = r["rows_capacity"] / base["rows_capacity"]
+            assert ratio >= 0.9 * S, \
+                f"capacity at S={S} scaled {ratio:.2f}x (< {0.9 * S:.1f}x)"
+            assert r["per_shard_bytes"] <= 2 * base["per_shard_bytes"], \
+                f"per-shard bytes grew {r['per_shard_bytes']} at S={S}"
+        print("acceptance OK: linear capacity scaling, flat per-shard "
+              "bytes, exact results at every shard count")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

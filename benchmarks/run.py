@@ -29,6 +29,7 @@ BENCHES = [
     "roofline_report",      # EXPERIMENTS.md §Roofline table
     "bench_gateway",        # EXPERIMENTS.md §Gateway hot-path + e2e
     "bench_refresh",        # EXPERIMENTS.md §Refresh non-blocking refresh
+    "bench_shard",          # EXPERIMENTS.md §Shard mesh cache plane
 ]
 
 

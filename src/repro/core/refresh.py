@@ -16,11 +16,18 @@ Phases (each ``step()`` consumes ~budget_s of bounded units):
             known from here on;
   apply     bounded chunks of the sorted region staged into the
             semantic cache's shadow buffer (host memcpy; the live device
-            mirror keeps serving, spill inserts keep patching it);
-  commit    one ``commit_shadow``: spill trim + single upload + atomic
-            mirror-pointer swap (generation bump);
+            mirror keeps serving, spill inserts keep patching it) — on a
+            sharded cache plane (DESIGN.md §11) each chunk is scattered
+            straight into its owner shard's staging rows;
+  commit    one ``commit_shadow``: spill trim + single upload (per-shard
+            when sharded) + atomic mirror-pointer swap (generation bump);
   t2h       the 5% T2H sample re-probed against the *new* state in
             bounded blocks; table install + ``retune()`` end the cycle.
+            The block size is deliberately shard-agnostic: each probe
+            already batches t2h_block queries into one dispatch, which
+            amortizes the sharded plane's per-block collective, and a
+            fixed block keeps the one-unit-per-tick latency bound
+            independent of shard count.
 
 Equivalence: driving the pipeline to completion yields the same centroid
 store, T2H table, and lookup results as the synchronous ``SISO.refresh()``

@@ -32,6 +32,17 @@ once, and atomically swaps the mirror pointer — the jitted top-1 never
 sees an invalidated or half-built matrix. Every mirror swap/rebuild bumps
 ``generation``, which each LookupResult carries so callers can prove a
 batch was served from exactly one buffer.
+
+Sharded cache plane (DESIGN.md §11): with a ``ShardedCacheConfig`` of
+``n_shards > 1`` the mirror is row-sharded over a ``cache`` mesh axis
+(round-robin owner mapping, pow2-padded per shard). Lookup runs the same
+fused theta-compare top-1 shard-locally plus one cross-shard argmax
+reduction; spill inserts route to the owner shard; the shadow buffer is
+staged directly in per-shard layout and committed with the same single
+upload + atomic pointer swap. All host-side bookkeeping (LRU clocks,
+access counts, victim selection) is unchanged, so sharded results are
+element-wise identical to the 1-device reference; ``n_shards == 1`` keeps
+this file's single-device hot path bit-identical.
 """
 from __future__ import annotations
 
@@ -45,6 +56,8 @@ import numpy as np
 
 from repro.core.clustering import _pow2_pad
 from repro.core.store import CentroidStore
+from repro.distributed.cache_plane import (ShardedCacheConfig,
+                                           ShardedDeviceState, shard_pad)
 
 
 @jax.jit
@@ -98,6 +111,12 @@ class _DeviceState:
     aid: jax.Array      # (pad,) int32
     pad: int
 
+    @property
+    def rows(self) -> int:
+        """Addressable rows before the mirror must regrow (matches the
+        sharded plane's ``rows`` so insert_spill is layout-agnostic)."""
+        return self.pad
+
     def write_row(self, row: int, vec: np.ndarray, answer: np.ndarray,
                   answer_id: int) -> None:
         fn = _write_row_plain if jax.default_backend() == "cpu" \
@@ -124,12 +143,20 @@ class LookupResult:
 
 class SemanticCache:
     def __init__(self, dim: int, answer_dim: int, capacity: int,
-                 backend: str = "dense", spill_lru: bool = True):
+                 backend: str = "dense", spill_lru: bool = True,
+                 shard: Optional[ShardedCacheConfig] = None):
         self.dim = dim
         self.answer_dim = answer_dim
         self.capacity = capacity
         self.backend = backend
         self.spill_lru = spill_lru
+        # n_shards == 1 deliberately degrades to shard=None: the 1-device
+        # mesh path IS the single-device path, bit for bit (DESIGN.md §11)
+        self.shard = shard if shard is not None and shard.n_shards > 1 \
+            else None
+        if self.shard is not None and backend == "hnsw":
+            raise ValueError("sharded cache plane needs a device-resident "
+                             "backend (dense/pallas); hnsw is host-graph")
         self.centroids = CentroidStore(dim, answer_dim)
         self.spill = CentroidStore(dim, answer_dim)
         self._spill_clock = 0
@@ -147,6 +174,9 @@ class SemanticCache:
         # bumped whenever a NEW device state starts serving (rebuild or
         # shadow swap): lookups stamp it into LookupResult.generation
         self.generation = 0
+        # generation the HNSW fallback index was built at — guarded
+        # against the device mirror's generation at every graph lookup
+        self._hnsw_gen = 0
         self._shadow: Optional[dict] = None
 
     # ----------------------------------------------------------------- state
@@ -193,10 +223,24 @@ class SemanticCache:
 
     # ---------------------------------------------------------------- device
 
-    def _device_state(self) -> _DeviceState:
+    def _device_state(self):
         if self._dev is None:
             nc = len(self.centroids)
             n = nc + len(self.spill)
+            if self.shard is not None:   # mesh plane (DESIGN.md §11)
+                def cat(attr):
+                    a = getattr(self.centroids, attr)
+                    return a if not len(self.spill) else \
+                        np.concatenate([a, getattr(self.spill, attr)])
+                self._dev = ShardedDeviceState.build(
+                    self.shard.make_mesh(), self.shard.n_shards,
+                    cat("vectors").reshape(n, self.dim),
+                    cat("answers").reshape(n, self.answer_dim),
+                    cat("answer_id"), pad_floor=self.shard.pad_floor,
+                    backend=self.backend)
+                self.dev_rebuilds += 1
+                self.generation += 1
+                return self._dev
             pad = _pow2_pad(n)
             mat = np.zeros((pad, self.dim), np.float32)
             ans = np.zeros((pad, self.answer_dim), np.float32)
@@ -227,8 +271,23 @@ class SemanticCache:
         is staged here chunk by chunk via :meth:`shadow_write` while the
         live device mirror keeps serving; one :meth:`commit_shadow` makes
         it live. Sized with headroom for the spill rows that survive the
-        swap (regrown at commit if spill outgrew it meanwhile)."""
+        swap (regrown at commit if spill outgrew it meanwhile).
+
+        Sharded plane: the staging buffers are allocated directly in the
+        per-shard (S, pad, ...) owner layout, so every staged chunk is
+        already routed to its owner shard and the commit upload is one
+        shard-local transfer per shard (DESIGN.md §11)."""
         keep_spill = min(len(self.spill), max(0, self.capacity - n_new))
+        if self.shard is not None:
+            S = self.shard.n_shards
+            pad = shard_pad(n_new + keep_spill, S, self.shard.pad_floor)
+            self._shadow = {
+                "mat": np.zeros((S, pad, self.dim), np.float32),
+                "ans": np.zeros((S, pad, self.answer_dim), np.float32),
+                "valid": np.zeros((S, pad), bool),
+                "aid": np.full((S, pad), -1, np.int32),
+                "n_new": n_new, "filled": 0}
+            return
         pad = _pow2_pad(n_new + keep_spill)
         self._shadow = {
             "mat": np.zeros((pad, self.dim), np.float32),
@@ -237,16 +296,31 @@ class SemanticCache:
             "aid": np.full((pad,), -1, np.int32),
             "n_new": n_new, "filled": 0}
 
+    def _shadow_scatter(self, rows: np.ndarray, vectors: np.ndarray,
+                        answers: np.ndarray, answer_id: np.ndarray) -> None:
+        """Scatter host rows into the per-shard staging layout (vectorized
+        owner routing: shard r % S, local row r // S)."""
+        sh, S = self._shadow, self.shard.n_shards
+        s, l = rows % S, rows // S
+        sh["mat"][s, l] = vectors
+        sh["ans"][s, l] = answers
+        sh["aid"][s, l] = answer_id
+        sh["valid"][s, l] = True
+
     def shadow_write(self, vectors: np.ndarray, answers: np.ndarray,
                      answer_id: np.ndarray) -> None:
         """Stage one bounded chunk of the new centroid region (host-side
         memcpy — the live mirror is untouched)."""
         sh = self._shadow
         s, k = sh["filled"], len(vectors)
-        sh["mat"][s:s + k] = vectors
-        sh["ans"][s:s + k] = answers
-        sh["aid"][s:s + k] = answer_id
-        sh["valid"][s:s + k] = True
+        if self.shard is not None:
+            self._shadow_scatter(np.arange(s, s + k), vectors, answers,
+                                 answer_id)
+        else:
+            sh["mat"][s:s + k] = vectors
+            sh["ans"][s:s + k] = answers
+            sh["aid"][s:s + k] = answer_id
+            sh["valid"][s:s + k] = True
         sh["filled"] = s + k
 
     def commit_shadow(self, store: CentroidStore) -> None:
@@ -268,28 +342,53 @@ class SemanticCache:
         self._trim_spill()
         nc, ns = len(store), len(self.spill)
         need = nc + ns
-        mat, ans, valid, aid = sh["mat"], sh["ans"], sh["valid"], sh["aid"]
-        if need > len(mat):      # spill grew past the headroom: regrow
-            pad = _pow2_pad(need)
-            mat2 = np.zeros((pad, self.dim), np.float32)
-            ans2 = np.zeros((pad, self.answer_dim), np.float32)
-            valid2 = np.zeros((pad,), bool)
-            aid2 = np.full((pad,), -1, np.int32)
-            mat2[:nc], ans2[:nc] = mat[:nc], ans[:nc]
-            valid2[:nc], aid2[:nc] = valid[:nc], aid[:nc]
-            mat, ans, valid, aid = mat2, ans2, valid2, aid2
-        if ns:
-            mat[nc:need] = self.spill.vectors
-            ans[nc:need] = self.spill.answers
-            aid[nc:need] = self.spill.answer_id
-            valid[nc:need] = True
-        self._dev = _DeviceState(jnp.asarray(mat), jnp.asarray(ans),
-                                 jnp.asarray(valid), jnp.asarray(aid),
-                                 len(mat))
+        if self.shard is not None:
+            self._commit_shadow_sharded(nc, ns, need)
+        else:
+            mat, ans, valid, aid = (sh["mat"], sh["ans"], sh["valid"],
+                                    sh["aid"])
+            if need > len(mat):  # spill grew past the headroom: regrow
+                pad = _pow2_pad(need)
+                mat2 = np.zeros((pad, self.dim), np.float32)
+                ans2 = np.zeros((pad, self.answer_dim), np.float32)
+                valid2 = np.zeros((pad,), bool)
+                aid2 = np.full((pad,), -1, np.int32)
+                mat2[:nc], ans2[:nc] = mat[:nc], ans[:nc]
+                valid2[:nc], aid2[:nc] = valid[:nc], aid[:nc]
+                mat, ans, valid, aid = mat2, ans2, valid2, aid2
+            if ns:
+                mat[nc:need] = self.spill.vectors
+                ans[nc:need] = self.spill.answers
+                aid[nc:need] = self.spill.answer_id
+                valid[nc:need] = True
+            self._dev = _DeviceState(jnp.asarray(mat), jnp.asarray(ans),
+                                     jnp.asarray(valid), jnp.asarray(aid),
+                                     len(mat))
         self._hnsw = None        # graph path stays rebuild-based
         self._shadow = None
         self.generation += 1
         self.dev_swaps += 1
+
+    def _commit_shadow_sharded(self, nc: int, ns: int, need: int) -> None:
+        """Sharded tail of :meth:`commit_shadow`: append surviving spill
+        rows to their owner shards, then one shard-local upload per shard
+        + the same atomic pointer swap (DESIGN.md §11)."""
+        sh, S = self._shadow, self.shard.n_shards
+        if shard_pad(need, S, self.shard.pad_floor) > sh["mat"].shape[1]:
+            pad = shard_pad(need, S, self.shard.pad_floor)   # regrow
+            old = sh["mat"].shape[1]
+            for key, fill in (("mat", 0), ("ans", 0), ("valid", False),
+                              ("aid", -1)):
+                grown = np.full((S, pad) + sh[key].shape[2:], fill,
+                                sh[key].dtype)
+                grown[:, :old] = sh[key]
+                sh[key] = grown
+        if ns:
+            self._shadow_scatter(np.arange(nc, need), self.spill.vectors,
+                                 self.spill.answers, self.spill.answer_id)
+        self._dev = ShardedDeviceState.from_shard_layout(
+            self.shard.make_mesh(), S, sh["mat"], sh["ans"], sh["valid"],
+            sh["aid"], backend=self.backend)
 
     # ---------------------------------------------------------------- lookup
 
@@ -312,6 +411,14 @@ class SemanticCache:
             sims, idx = self._hnsw_lookup(queries)
             hit = sims >= theta_r
             answer, answer_id = self._host_gather(hit, idx, nc, B)
+        elif self.shard is not None:
+            # mesh plane: shard-local fused top-1 + cross-shard argmax
+            # (dense or pallas shard-local compute — DESIGN.md §11)
+            dev = self._device_state()
+            h, s, i, a, ai = dev.lookup(queries, theta_r)
+            hit, sims, idx, answer, answer_id = (
+                np.array(x) for x in jax.device_get((h, s, i, a, ai)))
+            answer_id = answer_id.astype(np.int64)
         elif self.backend == "pallas":
             from repro.kernels.cosine_topk import ops as ctk_ops
             dev = self._device_state()
@@ -380,6 +487,20 @@ class SemanticCache:
                                    np.zeros(len(self.spill))]) \
                 if len(self.spill) else self.centroids.cluster_size
             self._hnsw = HNSW.build(vecs, locality=size)
+            if self._dev is None:
+                # pure graph serving: an index rebuild IS a new serving
+                # state, so bump the generation exactly like a device
+                # mirror rebuild would — LookupResult.generation then
+                # tracks refreshes instead of reporting a stale counter
+                self.generation += 1
+            self._hnsw_gen = self.generation
+        if self._hnsw_gen != self.generation:
+            # a device rebuild/shadow swap advanced the serving state
+            # without invalidating the graph — serving from it would mix
+            # generations mid-refresh
+            raise RuntimeError(
+                f"HNSW index generation {self._hnsw_gen} is stale vs "
+                f"serving generation {self.generation}")
         return self._hnsw.search_batch(queries, k=1)
 
     # ----------------------------------------------------------------- spill
@@ -407,7 +528,7 @@ class SemanticCache:
                                              self._spill_clock)
             row = nc + len(self.spill) - 1
         if self._dev is not None:
-            if row < self._dev.pad:
+            if row < self._dev.rows:    # owner-shard routed when sharded
                 self._dev.write_row(row, vector, answer, answer_id)
                 self.dev_row_writes += 1
             else:               # outgrew the padding: rebuild (pow2 growth)

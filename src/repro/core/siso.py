@@ -20,6 +20,7 @@ from repro.core.refresh import RefreshPipeline
 from repro.core.semantic_cache import LookupResult, SemanticCache
 from repro.core.store import CentroidStore
 from repro.core.threshold import DynamicThreshold, T2HTable
+from repro.distributed.cache_plane import ShardedCacheConfig
 
 
 @dataclass
@@ -45,6 +46,11 @@ class SISOConfig:
                                      # the blocking refresh() per tick
     refresh_budget_s: float = 0.002  # ~wall budget one refresh_tick() may
                                      # spend advancing an in-flight cycle
+    shard: Optional[ShardedCacheConfig] = None
+                                     # mesh-shard the device-resident cache
+                                     # plane (DESIGN.md §11); None or
+                                     # n_shards=1 keeps the single-device
+                                     # hot path bit-identical
 
 
 class SISO:
@@ -53,7 +59,8 @@ class SISO:
         self.cfg = cfg
         self.cache = SemanticCache(cfg.dim, cfg.answer_dim, cfg.capacity,
                                    backend=cfg.backend,
-                                   spill_lru=cfg.spill_lru)
+                                   spill_lru=cfg.spill_lru,
+                                   shard=cfg.shard)
         self.manager = CacheManager(theta_c=cfg.theta_c)
         self.t2h = T2HTable(np.array([cfg.theta_r]), np.array([0.0]))
         self.threshold = DynamicThreshold(
@@ -336,4 +343,7 @@ class SISO:
             "refresh_cycles": self.pipeline.cycles,
             "refresh_ticks": self.pipeline.ticks,
             "mirror_generation": self.cache.generation,
+            # sharded cache plane (DESIGN.md §11): 1 = single-device path
+            "cache_shards": (self.cache.shard.n_shards
+                             if self.cache.shard is not None else 1),
         }

@@ -91,3 +91,23 @@ def cosine_topk(queries: jax.Array, centroids: jax.Array, k: int = 1,
     if return_hit:
         return vals, idx, hit[:B, 0].astype(bool)
     return vals, idx
+
+
+def cosine_top1_local(queries: jax.Array, centroids: jax.Array,
+                      valid: jax.Array | None = None,
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Shard-local exact top-1 for the sharded cache plane (DESIGN.md §11).
+
+    Runs inside shard_map over the ``cache`` axis, so early exit is
+    disabled: the cross-shard argmax reduction needs each shard's *exact*
+    best candidate, not the kernel's first match-good-enough row. Misses
+    (no valid row on this shard) are clamped to row 0 with their -inf
+    similarity kept, which loses every cross-shard comparison while
+    letting the caller gather the candidate answer unconditionally.
+    Returns ((B,) best sims, (B,) local rows).
+    """
+    vals, idx = cosine_topk(queries, centroids, k=1, valid=valid,
+                            theta=2.0, early_exit=False,
+                            interpret=interpret)
+    return vals[:, 0], jnp.maximum(idx[:, 0], 0)

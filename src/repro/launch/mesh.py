@@ -27,3 +27,20 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_cache_mesh(n_shards: int = 1):
+    """One-axis ("cache",) mesh for the sharded cache plane (DESIGN.md
+    §11) over the first ``n_shards`` visible devices. Kept separate from
+    the (data, model) compute mesh: the cache plane is a persistent
+    serving-state object whose device assignment must not be entangled
+    with per-model mesh choices. On a CPU host, force devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if n_shards > len(devs):
+        raise ValueError(
+            f"cache mesh needs {n_shards} devices, only {len(devs)} "
+            f"visible (XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devs[:n_shards]), ("cache",))

@@ -270,4 +270,11 @@ class ServingGateway:
         if cache is not None and hasattr(cache, "dev_rebuilds"):
             rep["dev_rebuilds"] = cache.dev_rebuilds
             rep["dev_row_writes"] = cache.dev_row_writes
+            rep["dev_swaps"] = cache.dev_swaps
+            shard = getattr(cache, "shard", None)
+            if shard is not None:   # mesh cache plane (DESIGN.md §11)
+                rep["cache_shards"] = shard.n_shards
+                dev = cache._dev
+                if dev is not None:
+                    rep["cache_rows_per_shard"] = dev.pad
         return rep

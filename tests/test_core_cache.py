@@ -123,6 +123,40 @@ def test_spill_lru_eviction(rng):
     assert res.hit[0] and res.hit[2] and not res.hit[1]
 
 
+def test_hnsw_fallback_stamps_fresh_generation(rng):
+    """The graph fallback must report serving generations like the device
+    path does: each index rebuild (refresh, spill insert) is a new
+    serving state, never a stale counter from before the refresh."""
+    d = 16
+    cache = SemanticCache(d, d, capacity=64, backend="hnsw")
+    vecs = _unit(rng, 8, d)
+    cache.set_centroids(_store(vecs, np.arange(8) + 1.0, d))
+    g1 = cache.lookup(vecs[:2], theta_r=0.9).generation
+    assert g1 == cache.generation > 0       # stamped, not the -1 default
+    # a refresh replaces the centroid set -> new serving generation
+    cache.set_centroids(_store(_unit(rng, 8, d), np.arange(8) + 1.0, d))
+    g2 = cache.lookup(vecs[:2], theta_r=0.9).generation
+    assert g2 > g1
+    # spill insert invalidates the graph -> rebuild -> new generation
+    v = _unit(rng, 1, d)[0]
+    cache.insert_spill(v, v, answer_id=7)
+    g3 = cache.lookup(v[None], theta_r=0.9).generation
+    assert g3 > g2
+
+
+def test_hnsw_generation_guard_catches_stale_index(rng):
+    """If the serving generation advances without invalidating the graph
+    (an invariant violation), the guard refuses to serve from it."""
+    d = 16
+    cache = SemanticCache(d, d, capacity=64, backend="hnsw")
+    vecs = _unit(rng, 8, d)
+    cache.set_centroids(_store(vecs, np.arange(8) + 1.0, d))
+    cache.lookup(vecs[:1], theta_r=0.9)     # builds the index
+    cache.generation += 1                   # simulate an unseen swap
+    with pytest.raises(RuntimeError, match="stale"):
+        cache.lookup(vecs[:1], theta_r=0.9)
+
+
 def test_cache_state_roundtrip(rng):
     d = 16
     cache = SemanticCache(d, d, capacity=8)
