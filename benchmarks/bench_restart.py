@@ -1,0 +1,356 @@
+"""Kill-and-recover drill: crash-safe persistence + warm restart
+(EXPERIMENTS.md §Restart, DESIGN.md §12).
+
+Two measurements over the live ServingGateway (virtual clock, same
+harness discipline as bench_slo):
+
+1. **Warm-restart equivalence** — serve phase A with persistence
+   attached (full snapshots at refresh commits + drain, deltas between),
+   snapshot at a drained boundary, then serve phase B twice: once
+   uninterrupted (reference) and once on a FRESH process image restored
+   via ``ServingGateway.warm_start()`` from a copy of the surviving
+   checkpoint directory. Phase-B lookups must be element-wise identical
+   (hit mask per batch, lifetime counters, theta trace, generation), the
+   post-restart hit ratio within 2% of the no-restart run, and recovery
+   wall-clock bounded. A cold gateway (empty cache, no restore) serves
+   the same phase B to show what the restart would cost without
+   persistence — a hit ratio near 0.
+
+2. **Hard-crash recovery** — a child process serves the stream while
+   snapshotting continuously (async writer); the parent SIGKILLs it
+   mid-serving (``repro.distributed.fault_tolerance.spawn_and_kill`` —
+   possibly mid-write, which is the point: the tmp-dir + rename protocol
+   must leave only complete snapshots), then warm-starts from whatever
+   survived and serves the tail of the stream. Recovery must succeed and
+   the post-crash hit ratio must beat a cold start.
+
+Writes results/BENCH_restart.json. Full mode asserts the acceptance
+bars; --smoke runs tiny sizes without assertions (the CI gate compares
+the JSON against benchmarks/baselines/BENCH_restart.json via
+tools/check_bench_regression.py).
+
+  PYTHONPATH=src python -m benchmarks.bench_restart [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+DIM = 32
+N_CLUSTERS = 240
+CAPACITY = 160
+THETA_R = 0.86
+N_SLOTS = 2
+MAX_NEW = 6              # same operating point as bench_slo: the engine
+                         # saturates under the scenario's bursts, so the
+                         # controller actually adapts theta_R
+TICK_S = 0.05
+CHUNK = 8
+ZERO_LOAD_S = MAX_NEW * TICK_S
+SLO_S = 1.3 * ZERO_LOAD_S
+_CHILD_ENV = "_BENCH_RESTART_CHILD"
+
+
+class VirtualClock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def make_engine():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serving.engine import ModelEngine
+    cfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ModelEngine(params, cfg, n_slots=N_SLOTS, max_len=48), cfg
+
+
+def make_scenario(n_train: int, n_test: int, seed: int = 0):
+    from repro.serving.workloads import build_scenario
+    return build_scenario("repeat_heavy", dim=DIM, n_clusters=N_CLUSTERS,
+                          seed=seed, n_train=n_train, n_test=n_test)
+
+
+def make_gateway(engine, *, bootstrap=None, persist_dir=None,
+                 delta_every: int = 4):
+    """Fresh process image of the serving plane: SISO + gateway. The
+    drill needs refresh_async=False — the async pipeline's per-tick
+    budget is wall-clock, so two runs of even the SAME state diverge in
+    refresh pacing; the blocking path is deterministic under the virtual
+    clock (same reasoning as bench_slo)."""
+    from repro.core.siso import SISO, SISOConfig
+    from repro.serving.gateway import ServingGateway
+    from repro.serving.simulator import bootstrap_frontend
+    cfg = SISOConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
+                     theta_r=THETA_R, dynamic_threshold=True,
+                     refresh_async=False)
+    siso = SISO(cfg, slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    siso.threshold.lambda_window = 2.0
+    if bootstrap is not None:
+        bootstrap_frontend(siso, bootstrap)
+    clock = VirtualClock()
+    gw = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                        clock=clock, slo_latency=SLO_S)
+    if persist_dir is not None:
+        gw.attach_persistence(persist_dir, delta_every=delta_every,
+                              async_write=True)
+    return gw, clock
+
+
+def drive_phase(gw, clock, test, vocab: int, lo: int, hi: int,
+                rng_seed: int = 7, max_ticks: int = 200_000) -> np.ndarray:
+    """Submit test requests [lo, hi) as their virtual arrivals come due;
+    returns the per-request hit mask in submission order."""
+    from repro.serving.gateway import GatewayRequest
+    rng = np.random.default_rng(rng_seed)
+    toks = rng.integers(0, vocab, size=(len(test.vectors), 6)) \
+        .astype(np.int32)
+    hits, i = [], lo
+    for _ in range(max_ticks):
+        if i >= hi and not gw.sched.queue and not gw.sched.active:
+            return np.concatenate(hits) if hits else np.zeros(0, bool)
+        due = []
+        while i < hi and test.arrivals[i] <= clock.t:
+            due.append(GatewayRequest(
+                rid=i, model_tokens=toks[i], embed_tokens=test.vectors[i],
+                user_id=int(test.user_ids[i]), max_new=MAX_NEW,
+                answer_vec=test.answers[i]))
+            i += 1
+        if due:
+            for j in range(0, len(due), CHUNK):
+                hits.append(gw.submit(due[j: j + CHUNK],
+                                      now=clock.t).copy())
+                clock.t += TICK_S
+        else:
+            gw.step()
+            clock.t += TICK_S
+        if (not gw.sched.active and not gw.sched.queue and i < hi
+                and test.arrivals[i] > clock.t):
+            clock.t = float(test.arrivals[i])
+    raise RuntimeError("drive loop exceeded max_ticks")
+
+
+def phase_slo(gw, lo: int) -> float:
+    """SLO attainment over completions with rid >= lo (the phase after
+    the restart boundary — 'attainment across the restart')."""
+    waits = [(r.t_done - r.t_submit) for r in gw.done if r.rid >= lo]
+    if not waits:
+        return 0.0
+    return float(np.mean(np.asarray(waits) <= SLO_S))
+
+
+# ---------------------------------------------------------------------------
+# drill 1: deterministic warm-restart equivalence
+# ---------------------------------------------------------------------------
+
+
+def run_drill(engine, cfg, n_a: int, n_b: int, workdir: str) -> dict:
+    scn = make_scenario(n_train=max(6 * (n_a + n_b) // 2, 240),
+                        n_test=n_a + n_b)
+    da = os.path.join(workdir, "ckpt_live")
+    db = os.path.join(workdir, "ckpt_survivor")
+
+    gw1, c1 = make_gateway(engine, bootstrap=scn.train, persist_dir=da)
+    drive_phase(gw1, c1, scn.test, cfg.vocab_size, 0, n_a)
+    gw1.drain()                        # writes the boundary full snapshot
+    gw1.ckpt.wait()
+    shutil.copytree(da, db)            # the disk that survives the "crash"
+    t_boundary = c1.t
+
+    # uninterrupted reference through phase B
+    hits_ref = drive_phase(gw1, c1, scn.test, cfg.vocab_size, n_a,
+                           n_a + n_b)
+    gw1.drain()
+    ref = gw1.report()
+
+    # fresh process image, warm restart from the survivor disk
+    gw2, c2 = make_gateway(engine, persist_dir=db)
+    meta = gw2.warm_start()
+    c2.t = t_boundary
+    hits_warm = drive_phase(gw2, c2, scn.test, cfg.vocab_size, n_a,
+                            n_a + n_b)
+    gw2.drain()
+    warm = gw2.report()
+    gw1.ckpt.wait()
+    gw2.ckpt.wait()
+
+    # cold start: same phase B, empty cache, nothing restored
+    gw3, c3 = make_gateway(engine)
+    c3.t = t_boundary
+    hits_cold = drive_phase(gw3, c3, scn.test, cfg.vocab_size, n_a,
+                            n_a + n_b)
+    gw3.drain()
+
+    identical = bool(
+        np.array_equal(hits_ref, hits_warm)
+        and ref["theta_trace"] == warm["theta_trace"]
+        and ref["mirror_generation"] == warm["mirror_generation"]
+        and all(np.isclose(ref[k], warm[k]) for k in
+                ("hit_ratio", "hits", "misses", "submitted", "completed",
+                 "served_cache", "served_engine", "theta_r")))
+    early = max(n_b // 4, 8)    # right after the restart, before a cold
+                                # cache can warm itself back up via spill
+    out = {
+        "n_a": n_a, "n_b": n_b,
+        "identical": identical,
+        "restored_kind": meta["kind"],
+        "restored_step": meta["step"],
+        "recovery_s": meta["recovery_s"],
+        "hit_ratio_ref_b": float(hits_ref.mean()),
+        "hit_ratio_warm_b": float(hits_warm.mean()),
+        "hit_ratio_cold_b": float(hits_cold.mean()),
+        "warm_minus_cold": float(hits_warm.mean() - hits_cold.mean()),
+        "hit_ratio_warm_early": float(hits_warm[:early].mean()),
+        "hit_ratio_cold_early": float(hits_cold[:early].mean()),
+        "warm_minus_cold_early": float(hits_warm[:early].mean()
+                                       - hits_cold[:early].mean()),
+        "slo_ref_b": phase_slo(gw1, n_a),
+        "slo_warm_b": phase_slo(gw2, n_a),
+        "lifetime_hit_ratio_warm": warm["hit_ratio"],
+        "lifetime_hit_ratio_ref": ref["hit_ratio"],
+    }
+    print(f"  identical={identical}  recovery={out['recovery_s']*1e3:.1f}ms"
+          f"  hit B: ref={out['hit_ratio_ref_b']:.2f} "
+          f"warm={out['hit_ratio_warm_b']:.2f} "
+          f"cold={out['hit_ratio_cold_b']:.2f}  "
+          f"slo B: ref={out['slo_ref_b']:.2f} warm={out['slo_warm_b']:.2f}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# drill 2: hard crash (SIGKILL) mid-serving, possibly mid-snapshot-write
+# ---------------------------------------------------------------------------
+
+
+def child_serve(ckpt_dir: str, n_test: int, n_train: int) -> int:
+    """Child body: serve the first 3/4 of the stream with continuous
+    async snapshots until the parent SIGKILLs us."""
+    engine, cfg = make_engine()
+    scn = make_scenario(n_train=n_train, n_test=n_test)
+    gw, clock = make_gateway(engine, bootstrap=scn.train,
+                             persist_dir=ckpt_dir, delta_every=1)
+    gw.snapshot(full=True)     # make sure at least one full exists early
+    drive_phase(gw, clock, scn.test, cfg.vocab_size, 0, 3 * n_test // 4)
+    gw.drain()
+    gw.ckpt.wait()
+    return 0
+
+
+def run_crash(engine, cfg, n_test: int, n_train: int,
+              workdir: str) -> dict:
+    from repro.distributed.fault_tolerance import spawn_and_kill
+    ckpt_dir = os.path.join(workdir, "ckpt_crash")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    env = dict(os.environ)
+    env[_CHILD_ENV] = json.dumps(
+        {"dir": ckpt_dir, "n_test": n_test, "n_train": n_train})
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+
+    def steps_on_disk() -> list[int]:
+        try:
+            return sorted(int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+                          if n.startswith("step_") and "tmp" not in n)
+        except (FileNotFoundError, ValueError):
+            return []
+
+    # kill as soon as a few snapshots have landed — the child is then in
+    # the thick of serving + async writing
+    killed, ran_s = spawn_and_kill(
+        [sys.executable, os.path.abspath(__file__)],
+        ready=lambda: len(steps_on_disk()) >= 3,
+        env=env, grace_s=0.1, timeout_s=600.0)
+    tmp_left = [n for n in os.listdir(ckpt_dir) if ".tmp-" in n]
+    steps = steps_on_disk()
+    print(f"  child killed={killed} after {ran_s:.1f}s; "
+          f"{len(steps)} snapshot(s) survived, {len(tmp_left)} torn tmp")
+
+    # recover in THIS process and serve the tail of the stream
+    scn = make_scenario(n_train=n_train, n_test=n_test)
+    gw, clock = make_gateway(engine, persist_dir=ckpt_dir)
+    meta = gw.warm_start()
+    lo = 3 * n_test // 4
+    clock.t = max(float(gw._last_now), float(scn.test.arrivals[lo]))
+    hits = drive_phase(gw, clock, scn.test, cfg.vocab_size, lo, n_test)
+    gw.drain()
+    gw.ckpt.wait()
+    out = {
+        "killed_while_alive": bool(killed),
+        "child_ran_s": ran_s,
+        "snapshots_survived": len(steps),
+        "torn_tmp_dirs": len(tmp_left),
+        "recovered": True,
+        "restored_kind": meta["kind"],
+        "recovery_s": meta["recovery_s"],
+        "post_crash_hit_ratio": float(hits.mean()) if len(hits) else 0.0,
+        "restored_centroids": int(
+            len(gw.frontend.cache.centroids)),
+    }
+    print(f"  recovered from {meta['kind']} in {meta['recovery_s']*1e3:.1f}"
+          f"ms; post-crash hit ratio {out['post_crash_hit_ratio']:.2f} "
+          f"({out['restored_centroids']} centroids restored)")
+    return out
+
+
+def main(argv=None) -> int:
+    if os.environ.get(_CHILD_ENV):
+        spec = json.loads(os.environ[_CHILD_ENV])
+        return child_serve(spec["dir"], spec["n_test"], spec["n_train"])
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, no acceptance assertions")
+    # parse_known_args: benchmarks.run invokes main() with its own argv
+    args, _ = ap.parse_known_args(argv)
+    n_a, n_b = (48, 48) if args.smoke else (160, 160)
+    n_crash, n_train_crash = (64, 240) if args.smoke else (160, 960)
+
+    engine, cfg = make_engine()
+    workdir = tempfile.mkdtemp(prefix="bench_restart_")
+    print("== warm-restart equivalence drill ==")
+    t0 = time.perf_counter()
+    drill = run_drill(engine, cfg, n_a, n_b, workdir)
+    print("== hard-crash (SIGKILL) recovery drill ==")
+    crash = run_crash(engine, cfg, n_crash, n_train_crash, workdir)
+    payload = {"drill": drill, "crash": crash, "slo_s": SLO_S,
+               "wall_s": time.perf_counter() - t0,
+               "smoke": bool(args.smoke)}
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "BENCH_restart.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    shutil.rmtree(workdir, ignore_errors=True)
+
+    if not args.smoke:
+        assert drill["identical"], \
+            "warm restart diverged from the uninterrupted run"
+        assert abs(drill["hit_ratio_warm_b"] - drill["hit_ratio_ref_b"]) \
+            <= 0.02, "post-restart hit ratio off the no-restart run by >2%"
+        assert drill["warm_minus_cold"] >= 0.05, \
+            "warm restart barely beats a cold start over the whole phase"
+        assert drill["warm_minus_cold_early"] >= 0.15, \
+            "warm restart barely beats a cold start right after recovery"
+        assert drill["recovery_s"] < 30.0, "recovery took too long"
+        assert crash["recovered"] and crash["snapshots_survived"] >= 1
+        assert crash["post_crash_hit_ratio"] > 0.0
+        print("acceptance OK: element-wise identical warm restart, "
+              "bounded recovery, crash-safe snapshots")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,6 +30,7 @@ BENCHES = [
     "bench_gateway",        # EXPERIMENTS.md §Gateway hot-path + e2e
     "bench_refresh",        # EXPERIMENTS.md §Refresh non-blocking refresh
     "bench_shard",          # EXPERIMENTS.md §Shard mesh cache plane
+    "bench_restart",        # EXPERIMENTS.md §Restart kill-and-recover drill
 ]
 
 

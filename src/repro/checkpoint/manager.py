@@ -12,11 +12,13 @@ never blocks on disk; wait() drains before exit or restore.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import os
 import queue
 import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -24,6 +26,10 @@ import ml_dtypes
 import numpy as np
 
 _BF16_TAG = "__bf16"   # np.savez stores bf16 as raw void; view as uint16
+
+# live tmp dirs older than this are presumed wedged and reclaimed even if
+# their writer pid still exists (class attr so tests can shrink it)
+TMP_GC_AGE_S = 3600.0
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
@@ -33,17 +39,75 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
-    elif hasattr(tree, "_asdict"):          # NamedTuple (AdamWState)
-        out.update(_flatten(tree._asdict(), prefix))
+        if hasattr(tree, "_asdict"):        # NamedTuple (AdamWState)
+            out.update(_flatten(tree._asdict(), prefix))
+        else:
+            for i, v in enumerate(tree):
+                out.update(_flatten(v, f"{prefix}{i}/"))
     else:
         # bare-array state entry: "_root_" marks a leaf at the top level
         out[prefix[:-1] if prefix else "_root_"] = np.asarray(tree)
     return out
 
 
-def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+def _tree_spec(tree: Any) -> Any:
+    """JSON-serializable structure descriptor matching _flatten's walk.
+
+    Saved in the MANIFEST so restore() can rebuild the exact container
+    types: without it, lists/tuples came back as dicts keyed by *string*
+    indices (and string-sorted, so "10" < "2" reordered sequences of 10+
+    elements) and NamedTuples (e.g. AdamWState) decayed to plain dicts —
+    optimizer/engine state did not round-trip.
+    """
+    if isinstance(tree, dict):
+        return {"t": "dict", "k": {k: _tree_spec(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):  # NamedTuple
+        cls = type(tree)
+        return {"t": "namedtuple",
+                "cls": f"{cls.__module__}:{cls.__qualname__}",
+                "k": {k: _tree_spec(v) for k, v in tree._asdict().items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "tuple" if isinstance(tree, tuple) else "list",
+                "c": [_tree_spec(v) for v in tree]}
+    return {"t": "leaf"}
+
+
+def _import_class(ref: str):
+    module, _, qualname = ref.partition(":")
+    try:
+        obj = importlib.import_module(module)
+        for part in qualname.split("."):
+            obj = getattr(obj, part)
+        return obj
+    except (ImportError, AttributeError):
+        return None
+
+
+def _unflatten_spec(flat: dict[str, np.ndarray], spec: Any,
+                    prefix: str = "") -> Any:
+    t = spec["t"]
+    if t == "leaf":
+        return flat[prefix[:-1] if prefix else "_root_"]
+    if t in ("list", "tuple"):
+        seq = [_unflatten_spec(flat, s, f"{prefix}{i}/")
+               for i, s in enumerate(spec["c"])]
+        return tuple(seq) if t == "tuple" else seq
+    fields = {k: _unflatten_spec(flat, s, f"{prefix}{k}/")
+              for k, s in spec["k"].items()}
+    if t == "namedtuple":
+        cls = _import_class(spec["cls"])
+        if cls is not None:
+            return cls(**fields)
+    return fields
+
+
+def _unflatten(flat: dict[str, np.ndarray], spec: Any = None) -> Any:
+    if spec is not None:
+        return _unflatten_spec(flat, spec)
+    # legacy checkpoint (no spec in the MANIFEST): rebuild nested dicts,
+    # then recover sequences from all-numeric key sets in *numeric* order
+    # (tuples/NamedTuples still decay to list/dict — only the spec can
+    # tell those apart)
     if set(flat) == {"_root_"}:
         return flat["_root_"]
     tree: dict = {}
@@ -53,7 +117,26 @@ def _unflatten(flat: dict[str, np.ndarray]) -> Any:
         for p in parts[:-1]:
             node = node.setdefault(p, {})
         node[parts[-1]] = arr
-    return tree
+    return _listify(tree)
+
+
+def _listify(node: Any) -> Any:
+    if not isinstance(node, dict):
+        return node
+    node = {k: _listify(v) for k, v in node.items()}
+    if node and all(k.isdigit() for k in node):
+        return [node[k] for k in sorted(node, key=int)]
+    return node
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True      # exists, owned by someone else
+    return True
 
 
 class CheckpointManager:
@@ -61,9 +144,14 @@ class CheckpointManager:
                  async_write: bool = False):
         self.dir = directory
         self.keep = keep
+        # steps retention must never reap, regardless of age: a caller
+        # layering delta snapshots over a full one protects the newest
+        # full step here, or the deltas would outlive their base
+        self.protect: set[int] = set()
         os.makedirs(directory, exist_ok=True)
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         if async_write:
             self._q = queue.Queue()
             self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -73,7 +161,14 @@ class CheckpointManager:
 
     def save(self, step: int, state: dict[str, Any]) -> None:
         """state: {"params": tree, "opt": AdamWState, "cache": dict, ...}"""
-        host = jax.tree.map(lambda x: np.asarray(x), state)
+        # async: deep-copy (np.array) in one traversal — asarray would
+        # alias the caller's live buffers (spill rows, LRU clocks, EMA
+        # scalars), which keep mutating while the writer thread
+        # serializes, and the snapshot must be of the state at save()
+        # time. Sync writes finish before the caller resumes, so a
+        # zero-copy asarray view is safe there.
+        to_host = np.array if self._q is not None else np.asarray
+        host = jax.tree.map(to_host, state)
         if self._q is not None:
             self._q.put((step, host))
         else:
@@ -82,13 +177,22 @@ class CheckpointManager:
     def wait(self) -> None:
         if self._q is not None:
             self._q.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
 
-    def restore(self, step: int) -> dict[str, Any]:
+    def restore(self, step: int,
+                keys: Optional[list[str]] = None) -> dict[str, Any]:
+        """Load a checkpoint; ``keys`` restricts to a subset of top-level
+        state keys (e.g. just a small "meta" entry when a caller only
+        needs to classify the snapshot before deciding to load it)."""
         path = self._step_dir(step)
         with open(os.path.join(path, "MANIFEST.json")) as f:
             manifest = json.load(f)
+        specs = manifest.get("spec", {})
         out: dict[str, Any] = {}
-        for key in manifest["keys"]:
+        for key in manifest["keys"] if keys is None \
+                else [k for k in manifest["keys"] if k in keys]:
             with np.load(os.path.join(path, f"{key}.npz")) as z:
                 flat = {}
                 for k in z.files:
@@ -97,7 +201,7 @@ class CheckpointManager:
                             z[k].view(ml_dtypes.bfloat16)
                     else:
                         flat[k] = z[k]
-                out[key] = _unflatten(flat)
+                out[key] = _unflatten(flat, specs.get(key))
         return out
 
     def restore_latest(self) -> tuple[int, dict[str, Any]]:
@@ -122,14 +226,34 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")
 
+    def _gc_stale_tmp(self) -> None:
+        """Reap tmp dirs left by *dead* writers only. A sharded launch has
+        several live pids checkpointing into the same directory — deleting
+        every ``*.tmp-*`` raced their in-flight writes and corrupted the
+        rename. A tmp dir is stale iff its writer pid no longer exists or
+        the dir has not been touched for TMP_GC_AGE_S (wedged writer)."""
+        now = time.time()
+        for name in os.listdir(self.dir):
+            if ".tmp-" not in name:
+                continue
+            path = os.path.join(self.dir, name)
+            try:
+                pid = int(name.rsplit(".tmp-", 1)[1])
+            except ValueError:
+                pid = None
+            if pid is not None and pid != os.getpid() and _pid_alive(pid):
+                try:
+                    age = now - os.path.getmtime(path)
+                except OSError:
+                    continue          # vanished: its writer renamed it
+                if age < TMP_GC_AGE_S:
+                    continue          # live concurrent writer — hands off
+            shutil.rmtree(path, ignore_errors=True)
+
     def _write(self, step: int, host: dict[str, Any]) -> None:
         final = self._step_dir(step)
         tmp = f"{final}.tmp-{os.getpid()}"
-        # gc stale tmp dirs from killed writers
-        for name in os.listdir(self.dir):
-            if ".tmp-" in name:
-                shutil.rmtree(os.path.join(self.dir, name),
-                              ignore_errors=True)
+        self._gc_stale_tmp()
         os.makedirs(tmp, exist_ok=True)
         keys = sorted(host)
         for key in keys:
@@ -145,7 +269,8 @@ class CheckpointManager:
                 f.flush()
                 os.fsync(f.fileno())
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-            json.dump({"step": step, "keys": keys}, f)
+            json.dump({"step": step, "keys": keys,
+                       "spec": {k: _tree_spec(host[k]) for k in keys}}, f)
             f.flush()
             os.fsync(f.fileno())
         if os.path.exists(final):
@@ -156,6 +281,8 @@ class CheckpointManager:
     def _retain(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
+            if s in self.protect:
+                continue
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     def _worker(self) -> None:
@@ -163,5 +290,7 @@ class CheckpointManager:
             step, host = self._q.get()
             try:
                 self._write(step, host)
+            except BaseException as e:      # surfaced by the next wait()
+                self._error = e
             finally:
                 self._q.task_done()

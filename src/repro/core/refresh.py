@@ -200,6 +200,90 @@ class RefreshPipeline:
             self.cycles += 1
             self.phase = "idle"
 
+    # ---------------------------------------------------------- persistence
+
+    def state_dict(self) -> dict:
+        """Serializable view of the in-flight cycle (DESIGN.md §12).
+
+        Device-side intermediates (CommunityDetector tiles, MergePlanner
+        blocks, the half-staged shadow buffer) are deliberately NOT
+        serialized: every phase up to ``commit`` is a deterministic pure
+        function of the snapshot arrays + the frozen access counts, so a
+        restore simply *restarts* the cycle from its inputs ("restart"
+        group) and converges to the identical store/T2H. Once the commit
+        has swapped the mirror ("t2h" phase), re-running the merge would
+        double-apply Algorithm 1 — so from there the bounded T2H probe
+        state itself is carried (sample, cursor, accumulated sims).
+        """
+        out = {"cycles": np.asarray(self.cycles),
+               "ticks": np.asarray(self.ticks)}
+        if self.phase == "idle":
+            out["phase"] = np.asarray("idle")
+        elif self.phase == "t2h":
+            st = self._stats or RefreshStats()
+            out.update({
+                "phase": np.asarray("t2h"),
+                "t2h_sample": np.asarray(self._t2h_sample, np.float32),
+                "t2h_pos": np.asarray(self._t2h_pos),
+                "t2h_sims": (np.concatenate(self._t2h_sims)
+                             if self._t2h_sims else
+                             np.zeros((0,), np.float32)),
+                "stats": np.asarray([st.merged, st.added, st.evicted],
+                                    np.int64)})
+        else:   # snapshot | cluster | plan | apply | commit -> restart
+            if self.phase == "snapshot":    # arrays not stacked yet
+                log_vecs, log_answers = self._raw
+                vecs = np.stack(log_vecs)
+                answers = np.stack([a for a, _ in log_answers])
+                aids = np.array([i for _, i in log_answers], np.int64)
+                counts0 = self.siso.cache.centroids.access_count.copy()
+            else:
+                vecs, answers, aids = self._vecs, self._answers, self._aids
+                counts0 = self._counts0
+            out.update({"phase": np.asarray("restart"),
+                        "vecs": np.asarray(vecs, np.float32),
+                        "answers": np.asarray(answers, np.float32),
+                        "aids": np.asarray(aids, np.int64),
+                        "counts0": np.asarray(counts0, np.float64)})
+        return out
+
+    def load_state(self, state: dict) -> None:
+        # the restored state is authoritative: whatever cycle this object
+        # was in (including one restored from a base snapshot a delta now
+        # overlays) is discarded wholesale
+        self._detector = self._planner = None
+        self._raw = self._final = None
+        self.cycles = int(state["cycles"])
+        self.ticks = int(state["ticks"])
+        phase = str(np.asarray(state["phase"]))
+        if phase == "idle":
+            self.phase = "idle"
+            return
+        self._rng = None    # custom cycle rngs do not survive a restart
+        # np.array (copy) everywhere below: in-process restores must not
+        # alias arrays the donor pipeline keeps mutating
+        if phase == "t2h":
+            st = np.asarray(state["stats"], np.int64)
+            self._stats = RefreshStats(*(int(x) for x in st))
+            self._t2h_sample = np.array(state["t2h_sample"], np.float32)
+            self._t2h_pos = int(state["t2h_pos"])
+            sims = np.array(state["t2h_sims"], np.float32)
+            self._t2h_sims = [sims] if len(sims) else []
+            self.phase = "t2h"
+            return
+        # pre-commit phases restart from the cycle's inputs: same snapshot
+        # + same frozen counts -> same centroids, same carry, same T2H
+        self._vecs = np.array(state["vecs"], np.float32)
+        self._answers = np.array(state["answers"], np.float32)
+        self._aids = np.array(state["aids"], np.int64)
+        self._counts0 = np.array(state["counts0"], np.float64)
+        self._stats = None
+        self._detector = CommunityDetector(
+            self._vecs, threshold=self.siso.cfg.theta_c,
+            count_block=self.count_block, seed_block=self.seed_block,
+            scan_rows=self.scan_rows, fused_counts=False)
+        self.phase = "cluster"
+
     def _carry_access_counts(self) -> None:
         """Fold hits that landed while this cycle was in flight into the
         new store: the live store keeps counting during plan/apply, but

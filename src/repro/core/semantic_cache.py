@@ -178,6 +178,11 @@ class SemanticCache:
         # against the device mirror's generation at every graph lookup
         self._hnsw_gen = 0
         self._shadow: Optional[dict] = None
+        # set by load_state: the next mirror (re)build reproduces the
+        # snapshot's serving state, so it must NOT advance the generation
+        # (restored lookups stay element-wise identical to an
+        # uninterrupted run, DESIGN.md §12)
+        self._restore_pending = False
 
     # ----------------------------------------------------------------- state
 
@@ -191,6 +196,7 @@ class SemanticCache:
         store.take(order)  # locality-first layout
         self.centroids = store
         self._trim_spill()
+        self._restore_pending = False   # a real new state supersedes restore
         self._invalidate()
 
     def _trim_spill(self) -> None:
@@ -223,6 +229,15 @@ class SemanticCache:
 
     # ---------------------------------------------------------------- device
 
+    def _bump_generation(self) -> None:
+        """A mirror/index rebuild normally starts a NEW serving state —
+        except the one rebuild that re-materializes a restored snapshot,
+        which must reproduce the snapshot's generation exactly."""
+        if self._restore_pending:
+            self._restore_pending = False
+        else:
+            self.generation += 1
+
     def _device_state(self):
         if self._dev is None:
             nc = len(self.centroids)
@@ -239,7 +254,7 @@ class SemanticCache:
                     cat("answer_id"), pad_floor=self.shard.pad_floor,
                     backend=self.backend)
                 self.dev_rebuilds += 1
-                self.generation += 1
+                self._bump_generation()
                 return self._dev
             pad = _pow2_pad(n)
             mat = np.zeros((pad, self.dim), np.float32)
@@ -259,7 +274,7 @@ class SemanticCache:
                                      jnp.asarray(valid), jnp.asarray(aid),
                                      pad)
             self.dev_rebuilds += 1
-            self.generation += 1
+            self._bump_generation()
         return self._dev
 
     # --------------------------------------------- double-buffered refresh
@@ -366,6 +381,7 @@ class SemanticCache:
                                      len(mat))
         self._hnsw = None        # graph path stays rebuild-based
         self._shadow = None
+        self._restore_pending = False   # a real new state supersedes restore
         self.generation += 1
         self.dev_swaps += 1
 
@@ -492,7 +508,8 @@ class SemanticCache:
                 # state, so bump the generation exactly like a device
                 # mirror rebuild would — LookupResult.generation then
                 # tracks refreshes instead of reporting a stale counter
-                self.generation += 1
+                # (unless this rebuild re-materializes a restored snapshot)
+                self._bump_generation()
             self._hnsw_gen = self.generation
         if self._hnsw_gen != self.generation:
             # a device rebuild/shadow swap advanced the serving state
@@ -542,19 +559,121 @@ class SemanticCache:
         t = self.hits + self.misses
         return self.hits / t if t else 0.0
 
+    def layout_dict(self) -> dict:
+        """Device-mirror layout descriptor (DESIGN.md §11/§12): how the
+        host rows are placed on the accelerator plane. Informational in a
+        snapshot — a restore may legally re-shard (the owner mapping is a
+        pure function of (row, n_shards), and lookups are shard-count
+        invariant), so the saved layout documents the dead process's
+        plane rather than constraining the new one."""
+        S = self.shard.n_shards if self.shard is not None else 1
+        if self._dev is not None:
+            if hasattr(self._dev, "layout_dict"):   # sharded plane
+                return self._dev.layout_dict()
+            return {"n_shards": np.asarray(1),
+                    "rows": np.asarray(self._dev.rows),
+                    "pad": np.asarray(self._dev.pad)}
+        n = len(self.centroids) + len(self.spill)
+        pad = (shard_pad(n, S, self.shard.pad_floor) if self.shard is not None
+               else _pow2_pad(n))
+        return {"n_shards": np.asarray(S), "rows": np.asarray(pad * S),
+                "pad": np.asarray(pad)}
+
     def state_dict(self) -> dict:
+        """Full snapshot: every piece of live state a warm restart needs
+        to serve element-wise identical lookups (DESIGN.md §12)."""
         return {"centroids": self.centroids.state_dict(),
                 "spill": self.spill.state_dict(),
                 "spill_last_use": self._spill_last_use,
                 "spill_clock": np.asarray(self._spill_clock),
                 "hits": np.asarray(self.hits),
-                "misses": np.asarray(self.misses)}
+                "misses": np.asarray(self.misses),
+                "generation": np.asarray(self.generation),
+                # was a serving mirror/index materialized at snapshot
+                # time? If yes, the restore-rebuild reproduces it (no
+                # generation bump); if an invalidation was pending, the
+                # uninterrupted run would have bumped on its next lookup,
+                # so the restored run must too
+                "mirror_live": np.asarray(self._dev is not None
+                                          or self._hnsw is not None),
+                "dev_rebuilds": np.asarray(self.dev_rebuilds),
+                "dev_row_writes": np.asarray(self.dev_row_writes),
+                "dev_swaps": np.asarray(self.dev_swaps),
+                "layout": self.layout_dict()}
 
-    def load_state(self, state: dict) -> None:
-        self.centroids = CentroidStore.from_state(state["centroids"])
-        self.spill = CentroidStore.from_state(state["spill"])
-        self._spill_last_use = np.asarray(state["spill_last_use"], np.int64)
+    def state_delta(self) -> dict:
+        """Delta snapshot: everything that mutates *between* refresh
+        commits. The centroid region's vectors/answers/ids/cluster_size
+        only change at a commit (which writes a full snapshot), so a
+        delta carries just the centroid access counts plus the whole
+        (small, churning) spill region, recency state, and counters.
+        The centroid ids ride along as the witness that the delta and
+        its base describe the same centroid region."""
+        return {"centroid_ids": self.centroids.ids,
+                "centroid_access": self.centroids.access_count,
+                "mirror_live": np.asarray(self._dev is not None
+                                          or self._hnsw is not None),
+                "spill": self.spill.state_dict(),
+                "spill_last_use": self._spill_last_use,
+                "spill_clock": np.asarray(self._spill_clock),
+                "hits": np.asarray(self.hits),
+                "misses": np.asarray(self.misses),
+                "generation": np.asarray(self.generation),
+                "dev_rebuilds": np.asarray(self.dev_rebuilds),
+                "dev_row_writes": np.asarray(self.dev_row_writes),
+                "dev_swaps": np.asarray(self.dev_swaps)}
+
+    def _load_common(self, state: dict) -> None:
+        # np.array (copy): in-process restores must not alias the donor's
+        # live recency buffer
+        self._spill_last_use = np.array(state["spill_last_use"], np.int64)
         self._spill_clock = int(state["spill_clock"])
         self.hits = int(state["hits"])
         self.misses = int(state["misses"])
+        self.generation = int(state.get("generation", self.generation))
+        self.dev_rebuilds = int(state.get("dev_rebuilds", self.dev_rebuilds))
+        self.dev_row_writes = int(state.get("dev_row_writes",
+                                            self.dev_row_writes))
+        self.dev_swaps = int(state.get("dev_swaps", self.dev_swaps))
+
+    def load_state(self, state: dict) -> None:
+        cent = CentroidStore.from_state(state["centroids"])
+        if cent.vectors.shape[1] != self.dim:
+            raise ValueError(f"snapshot dim {cent.vectors.shape[1]} != "
+                             f"cache dim {self.dim}")
+        self.centroids = cent
+        self.spill = CentroidStore.from_state(state["spill"])
+        self._load_common(state)
+        self._restore_pending = bool(state.get("mirror_live",
+                                               "generation" in state))
         self._invalidate()
+
+    def load_delta(self, state: dict) -> None:
+        """Overlay a delta snapshot on an already-restored base (the full
+        snapshot of the same refresh epoch — the caller checks epochs)."""
+        access = np.array(state["centroid_access"], np.float64)
+        ids = np.asarray(state.get("centroid_ids", ()), np.int64)
+        if len(access) != len(self.centroids) \
+                or not np.array_equal(ids, self.centroids.ids):
+            raise ValueError(
+                "delta centroid region does not match the restored base "
+                "— the delta belongs to another refresh epoch")
+        self.centroids.access_count = access
+        self.spill = CentroidStore.from_state(state["spill"])
+        self._load_common(state)
+        self._restore_pending = bool(state.get("mirror_live", True))
+        self._invalidate()
+
+    def rebuild_mirror(self) -> None:
+        """Eagerly re-materialize the serving state from the restored host
+        arrays (warm restart, DESIGN.md §12): device mirror for the
+        dense/pallas/sharded paths, graph index for hnsw. The rebuild
+        keeps the restored generation — it reproduces the snapshot's
+        serving state, it does not start a new one."""
+        if len(self.centroids) + len(self.spill) == 0:
+            self._restore_pending = False
+            return
+        if self.backend == "hnsw":
+            self._hnsw_lookup(np.zeros((1, self.dim), np.float32))
+        else:
+            self._device_state()

@@ -322,6 +322,83 @@ class SISO:
         self._sync_refreshes += 1
         return stats
 
+    # ----------------------------------------------------------- persistence
+
+    def state_dict(self, delta: bool = False) -> dict:
+        """One snapshot of the whole serving-plane state (DESIGN.md §12):
+        cache (full or delta), controller, in-flight refresh cycle, the
+        accumulated miss log, repeat-tracking state, and counters.
+
+        ``delta=True`` captures only what mutates between refresh commits
+        (the centroid region rides in the epoch's full snapshot); restore
+        is then full-base + newest same-epoch delta.
+        """
+        users = sorted(self._user_last)
+        state = {
+            "cache": (self.cache.state_delta() if delta
+                      else self.cache.state_dict()),
+            "threshold": self.threshold.state_dict(),
+            "pipeline": self.pipeline.state_dict(),
+            "log_vecs": (np.stack(self._log_vecs) if self._log_vecs
+                         else np.zeros((0, self.cfg.dim), np.float32)),
+            "log_answers": (np.stack([a for a, _ in self._log_answers])
+                            if self._log_answers
+                            else np.zeros((0, self.cfg.answer_dim),
+                                          np.float32)),
+            "log_aids": np.array([i for _, i in self._log_answers],
+                                 np.int64),
+            "initial_log_size": np.asarray(self._initial_log_size),
+            "sync_refreshes": np.asarray(self._sync_refreshes),
+            "user_ids": np.asarray(users, np.int64),
+            "user_vecs": (np.stack([self._user_last[u][0] for u in users])
+                          if users else np.zeros((0, self.cfg.dim),
+                                                 np.float32)),
+            "user_times": np.asarray(
+                [self._user_last[u][1] for u in users], np.float64),
+        }
+        return state
+
+    @property
+    def refresh_epoch(self) -> int:
+        """Epoch a delta snapshot is valid against: the centroid region
+        changes iff this advances. It must tick at the *commit* boundary,
+        not cycle completion — an incremental cycle in its trailing T2H
+        phase has already swapped the store, so deltas taken there belong
+        to the new epoch even though ``refreshes_completed`` has not
+        moved yet."""
+        return self.refreshes_completed + int(self.pipeline.phase == "t2h")
+
+    def load_state(self, state: dict, delta: bool = False) -> None:
+        if delta:
+            self.cache.load_delta(state["cache"])
+        else:
+            self.cache.load_state(state["cache"])
+        self.threshold.load_state(state["threshold"])
+        self.t2h = self.threshold.t2h     # single shared table object
+        self.pipeline.load_state(state["pipeline"])
+        vecs = np.asarray(state["log_vecs"], np.float32)
+        answers = np.asarray(state["log_answers"], np.float32)
+        aids = np.asarray(state["log_aids"], np.int64)
+        self._log_vecs = [v for v in vecs]
+        self._log_answers = [(a, int(i)) for a, i in zip(answers, aids)]
+        self._initial_log_size = int(state["initial_log_size"])
+        self._sync_refreshes = int(state["sync_refreshes"])
+        self._user_last = {
+            int(u): (v, float(t))
+            for u, v, t in zip(np.asarray(state["user_ids"], np.int64),
+                               np.asarray(state["user_vecs"], np.float32),
+                               np.asarray(state["user_times"], np.float64))}
+
+    def warm_start(self) -> None:
+        """Re-materialize the restored serving state (DESIGN.md §12):
+        rebuild the device mirror (sharded or single-device) without
+        advancing the generation, then retune the operating point from
+        the restored T2H/lambda/bias — both are deterministic functions
+        of the restored state, so the first post-restart lookup is
+        element-wise identical to an uninterrupted run's."""
+        self.cache.rebuild_mirror()
+        self.threshold.retune()
+
     # --------------------------------------------------------------- metrics
 
     def stats(self) -> dict:

@@ -65,11 +65,25 @@ class CentroidStore:
         self.ids = np.concatenate([self.ids, new_ids])
         return new_ids
 
-    def set_row(self, i: int, vector, answer, answer_id: int = -1) -> None:
-        """Overwrite row i in place (LRU replacement); keeps the stable id."""
+    def set_row(self, i: int, vector, answer, answer_id: int = -1,
+                cluster_size: float = 1.0, access_count: float = 0.0) -> None:
+        """Overwrite row i in place (LRU replacement) with a NEW entry.
+
+        The victim's locality weight and popularity die with it —
+        inheriting them would hand the newcomer stale cluster_size /
+        access_count and pollute locality-aware replacement. The row also
+        gets a fresh stable id: the id names the *entry*, not the slot,
+        so generation-stamped lookups and the refresh pipeline's
+        id-matched access-count carry can never attribute the newcomer's
+        activity to the evicted entry.
+        """
         self.vectors[i] = np.asarray(vector, np.float32)
         self.answers[i] = np.asarray(answer, np.float32)
+        self.cluster_size[i] = cluster_size
+        self.access_count[i] = access_count
         self.answer_id[i] = answer_id
+        self.ids[i] = self._next_id
+        self._next_id += 1
 
     def take(self, keep: np.ndarray) -> None:
         """Keep rows selected by index array / bool mask (in-place)."""
@@ -100,12 +114,15 @@ class CentroidStore:
 
     @classmethod
     def from_state(cls, state: dict) -> "CentroidStore":
+        # np.array (copy), never asarray: a state dict may hold live
+        # references into another store (in-process restore) — restoring
+        # must not alias buffers the source keeps mutating
         out = cls(state["vectors"].shape[1], state["answers"].shape[1])
-        out.vectors = np.asarray(state["vectors"], np.float32)
-        out.answers = np.asarray(state["answers"], np.float32)
-        out.cluster_size = np.asarray(state["cluster_size"], np.float64)
-        out.access_count = np.asarray(state["access_count"], np.float64)
-        out.answer_id = np.asarray(state["answer_id"], np.int64)
-        out.ids = np.asarray(state["ids"], np.int64)
+        out.vectors = np.array(state["vectors"], np.float32)
+        out.answers = np.array(state["answers"], np.float32)
+        out.cluster_size = np.array(state["cluster_size"], np.float64)
+        out.access_count = np.array(state["access_count"], np.float64)
+        out.answer_id = np.array(state["answer_id"], np.int64)
+        out.ids = np.array(state["ids"], np.int64)
         out._next_id = int(state["next_id"])
         return out

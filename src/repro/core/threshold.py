@@ -211,6 +211,51 @@ class DynamicThreshold:
         if service is not None:
             self.observe_service(service)
 
+    # --------------------------------------------------------- persistence
+
+    def state_dict(self) -> dict:
+        """Controller state a warm restart must reproduce exactly: the
+        operating point, calibration, feedback bias, the open lambda
+        window, and the bounded telemetry (DESIGN.md §12). Constructor
+        configuration (SLO, windows, bands, enabled) is not state — the
+        restoring process re-supplies it."""
+        return {
+            "theta": np.asarray(self.theta),
+            "lam": np.asarray(self.lam),
+            "llm_latency": np.asarray(self.llm_latency),
+            "bias": np.asarray(self._bias),
+            "calibrated": np.asarray(self._calibrated),
+            "n_feedback": np.asarray(self.n_feedback),
+            "arrivals": np.asarray(self._arrivals, np.float64),
+            "last_refresh": np.asarray(
+                np.nan if self._last_refresh is None
+                else float(self._last_refresh)),
+            "lam_trace": np.asarray(list(self.lam_trace),
+                                    np.float64).reshape(-1, 2),
+            "wait_errors": np.asarray(list(self.wait_errors), np.float64),
+            "t2h": {"thetas": np.asarray(self.t2h.thetas, np.float64),
+                    "hit_ratios": np.asarray(self.t2h.hit_ratios,
+                                             np.float64)},
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.theta = float(state["theta"])
+        self.lam = float(state["lam"])
+        self.llm_latency = float(state["llm_latency"])
+        self._bias = int(state["bias"])
+        self._calibrated = bool(state["calibrated"])
+        self.n_feedback = int(state["n_feedback"])
+        self._arrivals = [float(a) for a in np.asarray(state["arrivals"])]
+        last = float(state["last_refresh"])
+        self._last_refresh = None if np.isnan(last) else last
+        self.lam_trace = deque((map(tuple, np.asarray(
+            state["lam_trace"]).reshape(-1, 2))), maxlen=TRACE_WINDOW)
+        self.wait_errors = deque(np.asarray(state["wait_errors"]).tolist(),
+                                 maxlen=ERR_WINDOW)
+        # np.array (copy): never alias a live table from the donor state
+        self.t2h = T2HTable(np.array(state["t2h"]["thetas"]),
+                            np.array(state["t2h"]["hit_ratios"]))
+
     # ----------------------------------------------------------- telemetry
 
     def wait_error_stats(self) -> dict:

@@ -229,6 +229,18 @@ class ShardedDeviceState:
             jnp.int32(row), jnp.array(vec, jnp.float32),
             jnp.array(answer, jnp.float32), jnp.int32(answer_id))
 
+    def layout_dict(self) -> dict:
+        """Serializable per-shard layout descriptor (rides in snapshots,
+        DESIGN.md §12): host row ``r`` lives on shard ``r % n_shards`` at
+        local row ``r // n_shards``, ``pad`` rows per shard. The mapping
+        is a pure function of (row, n_shards), so a warm restart on a
+        different shard count legally rebuilds a different-but-equivalent
+        plane; the descriptor records the plane the snapshot was serving
+        from."""
+        return {"n_shards": np.asarray(self.n_shards),
+                "rows": np.asarray(self.rows),
+                "pad": np.asarray(self.pad)}
+
     def nbytes_per_shard(self) -> int:
         """Device bytes each shard holds — the HBM-per-device proxy the
         capacity-scaling bench reports (EXPERIMENTS.md §Shard)."""

@@ -19,6 +19,8 @@ same device_put calls).
 """
 from __future__ import annotations
 
+import signal
+import subprocess
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -114,6 +116,49 @@ class StepWatchdog:
                 self.flagged.append((step, dt, med))
         self._times.append(dt)
         return slow
+
+
+# ---------------------------------------------------------------------------
+# hard-crash simulation (SIGKILL — no atexit, no flush, no goodbye)
+# ---------------------------------------------------------------------------
+
+
+def spawn_and_kill(argv: list[str], ready: Callable[[], bool],
+                   env: Optional[dict] = None, grace_s: float = 0.0,
+                   timeout_s: float = 300.0, poll_s: float = 0.05
+                   ) -> tuple[bool, float]:
+    """Run ``argv`` as a child and SIGKILL it the moment ``ready()`` turns
+    true (plus ``grace_s``): the machinery behind kill-and-recover drills
+    (benchmarks/bench_restart.py, DESIGN.md §12). SIGKILL — not SIGTERM —
+    so the child gets no chance to finish an in-flight snapshot write;
+    whatever survives on disk is exactly what a power loss would leave.
+
+    Returns (killed_while_alive, seconds_the_child_ran). If the child
+    exits on its own before ``ready()``, returns (False, elapsed); if
+    ``ready()`` never fires within ``timeout_s``, the child is killed and
+    a TimeoutError raised.
+    """
+    t0 = time.perf_counter()
+    proc = subprocess.Popen(argv, env=env)
+    try:
+        while True:
+            if proc.poll() is not None:
+                return False, time.perf_counter() - t0
+            if ready():
+                break
+            if time.perf_counter() - t0 > timeout_s:
+                raise TimeoutError(f"child not ready after {timeout_s}s")
+            time.sleep(poll_s)
+        if grace_s:
+            time.sleep(grace_s)
+        alive = proc.poll() is None
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        return alive, time.perf_counter() - t0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
 
 
 # ---------------------------------------------------------------------------

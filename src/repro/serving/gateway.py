@@ -38,6 +38,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.serving.engine import ModelEngine
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
@@ -127,6 +128,18 @@ class ServingGateway:
         self._eng_waits: deque = deque(maxlen=STATS_WINDOW)
         self._slo_ok = 0
         self._slo_n = 0
+        # completions ingested by a previous incarnation (warm restart):
+        # report()'s lifetime "completed" is base + this process's cursor
+        self._completed_base = 0
+        self._last_now = 0.0     # last submit() timestamp (rides in the
+                                 # snapshot so virtual clocks can resume)
+        # crash-safe persistence (DESIGN.md §12); attach_persistence wires
+        self.ckpt: Optional[CheckpointManager] = None
+        self._delta_every = 0
+        self._since_snap = 0
+        self._snap_step = 0
+        self._snap_epoch: Optional[int] = None
+        self._full_steps: deque = deque(maxlen=2)
 
     # ------------------------------------------------------------------ api
 
@@ -144,6 +157,9 @@ class ServingGateway:
             raise ValueError("mixed batch: every request must either set "
                              "embed_tokens or leave it unset (falls back "
                              "to model_tokens for the whole batch)")
+        # recorded only once the batch is accepted: a rejected batch must
+        # not advance the persisted resume clock
+        self._last_now = float(now)
         embed_toks = [r.embed_tokens if r.embed_tokens is not None
                       else r.model_tokens for r in batch]
         vectors = np.asarray(self.embed_fn(embed_toks), np.float32)
@@ -175,6 +191,7 @@ class ServingGateway:
                 self.sched.enqueue(req)
         self.sched.step()
         self._maybe_refresh()
+        self._maybe_snapshot()
         return res.hit
 
     def step(self) -> int:
@@ -188,6 +205,8 @@ class ServingGateway:
         Per-path serving counts live in report(), derived from done."""
         out = self.sched.drain(max_ticks)
         self._maybe_refresh(drain=True)
+        if self.ckpt is not None:
+            self.snapshot(full=True)    # drained = cheap consistent point
         return out
 
     @property
@@ -221,6 +240,196 @@ class ServingGateway:
             fe.refresh()
             self.stats.refreshes += 1
 
+    # --------------------------------------------------------- persistence
+
+    def attach_persistence(self, directory: str, keep: int = 3,
+                           async_write: bool = True,
+                           delta_every: int = 16) -> None:
+        """Wire crash-safe snapshotting (DESIGN.md §12).
+
+        Full snapshots are written whenever the frontend completes a
+        refresh cycle (piggybacked on the commit that just rewrote the
+        centroid region — the one moment the big matrices actually
+        changed) and at every drain(). Between commits, a cheap *delta*
+        snapshot (spill region, recency, controller, counters — no
+        centroid matrices) is written every ``delta_every`` submitted
+        batches. With ``async_write`` the writer runs on its own thread,
+        so submit() never blocks on disk.
+        """
+        fe = self.frontend
+        if not (hasattr(fe, "state_dict") and hasattr(fe, "load_state")):
+            raise ValueError("frontend has no state_dict/load_state — "
+                             "persistence needs a snapshot-capable "
+                             "frontend (e.g. SISO)")
+        self.ckpt = CheckpointManager(directory, keep=keep,
+                                      async_write=async_write)
+        self._delta_every = delta_every
+        steps = self.ckpt.all_steps()
+        self._snap_step = (steps[-1] + 1) if steps else 1
+        self._snap_epoch = self._epoch()
+        if not steps:
+            # fresh directory: lay down a base full immediately, or the
+            # first delta_every batches would write deltas with no full
+            # to compose against — a crash in that window would be
+            # unrecoverable despite snapshots on disk. (A populated
+            # directory means a restart: warm_start() restores first.)
+            self.snapshot(full=True)
+
+    def _epoch(self) -> int:
+        return int(getattr(self.frontend, "refresh_epoch", 0))
+
+    def state_dict(self) -> dict:
+        """Gateway/scheduler serving counters (the request path's own
+        state): lifetime tallies stay exact across a restart; in-flight
+        engine slots are NOT snapshotted — a crash loses queued misses,
+        which re-arrive as ordinary traffic."""
+        self._ingest_done()
+        trace = np.asarray([list(p) for p in self.stats.theta_trace],
+                           np.float64).reshape(-1, 2)
+        return {
+            "submitted": np.asarray(self.stats.submitted),
+            "refreshes": np.asarray(self.stats.refreshes),
+            "lookup_s": np.asarray(self.stats.lookup_s, np.float64),
+            "batch_sizes": np.asarray(self.stats.batch_sizes, np.int64),
+            "theta_trace": trace,
+            "served_cache": np.asarray(self._served["cache"]),
+            "served_engine": np.asarray(self._served["engine"]),
+            "eng_wait_sum": np.asarray(self._eng_wait_sum),
+            "eng_wait_n": np.asarray(self._eng_wait_n),
+            "eng_waits": np.asarray(self._eng_waits, np.float64),
+            "slo_ok": np.asarray(self._slo_ok),
+            "slo_n": np.asarray(self._slo_n),
+            "completed": np.asarray(self._completed_base
+                                    + self._done_cursor),
+            "sched_tick": np.asarray(self.sched._tick),
+            "last_now": np.asarray(self._last_now),
+        }
+
+    def load_state(self, state: dict) -> None:
+        st = self.stats
+        st.submitted = int(state["submitted"])
+        st.refreshes = int(state["refreshes"])
+        st.lookup_s = deque(np.asarray(state["lookup_s"]).tolist(),
+                            maxlen=STATS_WINDOW)
+        st.batch_sizes = deque(
+            np.asarray(state["batch_sizes"]).tolist(), maxlen=STATS_WINDOW)
+        st.theta_trace = deque(
+            (tuple(p) for p in np.asarray(
+                state["theta_trace"]).reshape(-1, 2)),
+            maxlen=STATS_WINDOW)
+        self._served = {"cache": int(state["served_cache"]),
+                        "engine": int(state["served_engine"])}
+        self._eng_wait_sum = float(state["eng_wait_sum"])
+        self._eng_wait_n = int(state["eng_wait_n"])
+        self._eng_waits = deque(np.asarray(state["eng_waits"]).tolist(),
+                                maxlen=STATS_WINDOW)
+        self._slo_ok = int(state["slo_ok"])
+        self._slo_n = int(state["slo_n"])
+        self._completed_base = int(state["completed"])
+        self._done_cursor = 0           # fresh process: empty done list
+        self.sched._tick = int(state["sched_tick"])
+        self._last_now = float(state.get("last_now", 0.0))
+
+    def snapshot(self, full: bool = True) -> int:
+        """Write one snapshot now; returns its step id. Composition:
+        ``meta`` (kind + refresh epoch) + frontend state + gateway
+        counters. Delta snapshots are valid only against the full
+        snapshot of the same refresh epoch (warm_start checks)."""
+        if self.ckpt is None:
+            raise RuntimeError("attach_persistence first")
+        fe = self.frontend
+        state = {
+            "meta": {"kind": np.asarray("full" if full else "delta"),
+                     "epoch": np.asarray(self._epoch())},
+            "frontend": (fe.state_dict() if full
+                         else fe.state_dict(delta=True)),
+            "gateway": self.state_dict(),
+        }
+        step = self._snap_step
+        self._snap_step += 1
+        self.ckpt.save(step, state)
+        if full:
+            # retention must never strand deltas without their base full.
+            # Keep the last TWO fulls protected: the async writer reaps in
+            # FIFO order, so by the time the older one becomes reapable
+            # (a third full enqueued), the middle one is already on disk —
+            # a crash can never leave only deltas behind.
+            self._full_steps.append(step)
+            self.ckpt.protect = set(self._full_steps)
+        self._since_snap = 0
+        self._snap_epoch = self._epoch()
+        return step
+
+    def _maybe_snapshot(self) -> None:
+        """Piggybacked cadence: a completed refresh commit triggers a full
+        snapshot (the centroid region just changed — deltas against the
+        old epoch stopped being valid); otherwise every ``delta_every``
+        batches ships a delta. The async writer makes both O(host-copy)
+        on the serving path."""
+        if self.ckpt is None:
+            return
+        epoch = self._epoch()
+        if epoch != self._snap_epoch:
+            self.snapshot(full=True)
+        else:
+            self._since_snap += 1
+            if self._delta_every and self._since_snap >= self._delta_every:
+                self.snapshot(full=False)
+
+    def warm_start(self) -> dict:
+        """Crash recovery (DESIGN.md §12): restore the newest full
+        snapshot (+ the newest later delta of the same refresh epoch),
+        rebuild the device mirror without advancing the serving
+        generation, retune the controller, and resume. Returns recovery
+        metadata: the restored step/kind and wall-clock spent."""
+        if self.ckpt is None:
+            raise RuntimeError("attach_persistence first")
+        t0 = time.perf_counter()
+        self.ckpt.wait()
+        steps = self.ckpt.all_steps()
+        full_step = delta_step = None
+        full_snap = delta_snap = None
+        for step in reversed(steps):
+            # classify from the tiny meta entry alone — loading whole
+            # intermediate snapshots here would bill recovery wall-clock
+            # for payloads that are about to be discarded
+            kind = str(np.asarray(
+                self.ckpt.restore(step, keys=["meta"])["meta"]["kind"]))
+            if kind == "delta" and delta_step is None and full_step is None:
+                delta_step = step
+            elif kind == "full":
+                full_step = step
+                break
+        if full_step is None:
+            raise FileNotFoundError(
+                f"no full snapshot under {self.ckpt.dir}")
+        full_snap = self.ckpt.restore(full_step)
+        if delta_step is not None:
+            delta_snap = self.ckpt.restore(delta_step)
+        fe = self.frontend
+        fe.load_state(full_snap["frontend"])
+        self.load_state(full_snap["gateway"])
+        restored = {"step": full_step, "kind": "full"}
+        if delta_snap is not None:
+            same_epoch = int(np.asarray(delta_snap["meta"]["epoch"])) \
+                == int(np.asarray(full_snap["meta"]["epoch"]))
+            if same_epoch:
+                fe.load_state(delta_snap["frontend"], delta=True)
+                self.load_state(delta_snap["gateway"])
+                restored = {"step": delta_step, "kind": "full+delta"}
+        if hasattr(fe, "warm_start"):
+            fe.warm_start()     # eager mirror rebuild + retune
+        self._snap_step = steps[-1] + 1
+        self._snap_epoch = self._epoch()
+        self._since_snap = 0
+        # re-protect the restored base: this process's fresh manager
+        # started with an empty protect set, and post-restart retention
+        # must never reap the full snapshot its deltas compose against
+        self._full_steps.append(full_step)
+        self.ckpt.protect = set(self._full_steps)
+        restored["recovery_s"] = time.perf_counter() - t0
+        return restored
+
     # --------------------------------------------------------------- report
 
     def _ingest_done(self) -> None:
@@ -248,7 +457,7 @@ class ServingGateway:
         rep = {
             **s,
             "submitted": self.stats.submitted,
-            "completed": self._done_cursor,
+            "completed": self._completed_base + self._done_cursor,
             "served_cache": self._served["cache"],
             "served_engine": self._served["engine"],
             "refreshes": self.stats.refreshes,

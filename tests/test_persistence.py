@@ -1,0 +1,547 @@
+"""Crash-safe persistence + warm restart (DESIGN.md §12).
+
+Property: state_dict() -> load_state() (and save -> kill -> restore via
+CheckpointManager) reproduce *identical* serving behavior versus an
+uninterrupted reference run — LookupResults element-wise (including the
+generation stamp), spill-victim selection, and threshold traces — on the
+1-device path here and on the forced-8-device sharded plane in a
+subprocess. Plus units for the state-round-trip bugfix sweep: set_row
+locality reset, checkpoint sequence/NamedTuple round-trip, stale-tmp GC.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def assert_results_equal(r1, r2, ctx=""):
+    for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+        a, b = getattr(r1, f), getattr(r2, f)
+        assert np.array_equal(a, b), (ctx, f, a, b)
+    assert r1.generation == r2.generation, (ctx, r1.generation,
+                                            r2.generation)
+
+
+# ---------------------------------------------------------------------------
+# satellite: CentroidStore.set_row must install a NEW entry
+# ---------------------------------------------------------------------------
+
+
+def test_set_row_resets_locality_popularity_and_id():
+    from repro.core.store import CentroidStore
+    st = CentroidStore(4, 4)
+    st.add(np.eye(4, dtype=np.float32), np.eye(4, dtype=np.float32),
+           cluster_size=np.array([9.0, 8.0, 7.0, 6.0]),
+           access_count=np.array([5.0, 4.0, 3.0, 2.0]))
+    old_ids = st.ids.copy()
+    v = norm(np.ones(4, np.float32))
+    st.set_row(2, v, v, answer_id=42)
+    # the victim's locality weight and popularity must not leak into the
+    # newcomer (stale cluster_size polluted locality-aware replacement)
+    assert st.cluster_size[2] == 1.0
+    assert st.access_count[2] == 0.0
+    assert st.answer_id[2] == 42
+    # and the slot is a NEW entry: fresh stable id, never a reused one
+    assert st.ids[2] not in old_ids
+    assert len(np.unique(st.ids)) == 4
+    # untouched rows keep everything
+    assert st.cluster_size[0] == 9.0 and st.access_count[1] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: checkpoint _unflatten sequence / NamedTuple round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrips_sequences_and_namedtuples():
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+    from repro.training.optimizer import AdamWState, init_state
+    params = {"w": jnp.ones((2, 3)), "blocks": [
+        {"a": jnp.full((2,), float(i))} for i in range(12)]}
+    opt = init_state(params)
+    state = {
+        "opt": opt,
+        "mixed": {"lst": [np.arange(3.0) + i for i in range(12)],
+                  "tup": (np.ones(2), np.zeros(3))},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        CheckpointManager(d, keep=1).save(1, state)
+        _, rec = CheckpointManager(d, keep=1).restore_latest()
+    # NamedTuple comes back as the NamedTuple, not a plain dict
+    assert isinstance(rec["opt"], AdamWState)
+    assert int(rec["opt"].step) == 0
+    np.testing.assert_array_equal(rec["opt"].m["w"], np.zeros((2, 3)))
+    # sequences come back as sequences, in order — 12 elements crosses the
+    # "10" < "2" string-sort trap
+    lst = rec["mixed"]["lst"]
+    assert isinstance(lst, list) and len(lst) == 12
+    for i, a in enumerate(lst):
+        np.testing.assert_array_equal(a, np.arange(3.0) + i)
+    blocks = rec["opt"].m["blocks"]
+    assert isinstance(blocks, list) and len(blocks) == 12
+    assert isinstance(rec["mixed"]["tup"], tuple)
+    np.testing.assert_array_equal(rec["mixed"]["tup"][1], np.zeros(3))
+
+
+def test_unflatten_legacy_numeric_paths_in_numeric_order():
+    """Specless (pre-spec checkpoint) fallback: all-numeric key sets are
+    rebuilt as lists ordered by int value, not by string sort."""
+    from repro.checkpoint.manager import _flatten, _unflatten
+    tree = {"seq": [np.full((1,), float(i)) for i in range(12)]}
+    rebuilt = _unflatten(_flatten(tree))
+    assert isinstance(rebuilt["seq"], list)
+    for i, a in enumerate(rebuilt["seq"]):
+        assert float(a[0]) == float(i), (i, a)
+
+
+def test_checkpoint_async_write_does_not_alias_live_buffers():
+    """An async save must snapshot values at save() time: the caller's
+    buffers keep mutating while the writer thread serializes."""
+    from repro.checkpoint import CheckpointManager
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2, async_write=True)
+        live = {"x": np.zeros(4096)}
+        cm.save(1, live)
+        live["x"][:] = 777.0          # mutate immediately after enqueue
+        cm.wait()
+        _, rec = cm.restore_latest()
+        np.testing.assert_array_equal(rec["x"], np.zeros(4096))
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale-tmp GC must not race live concurrent writers
+# ---------------------------------------------------------------------------
+
+
+def test_tmp_gc_spares_live_writers_reaps_dead_and_aged():
+    from repro.checkpoint import CheckpointManager, manager
+    try:        # a pid strictly beyond pid_max can never name a process
+        dead_pid = int(open("/proc/sys/kernel/pid_max").read()) + 7
+    except OSError:
+        dead_pid = 2 ** 30
+    with tempfile.TemporaryDirectory() as d:
+        live = os.path.join(d, "step_00000005.tmp-1")        # pid 1: alive
+        dead = os.path.join(d, f"step_00000006.tmp-{dead_pid}")
+        aged = os.path.join(d, "step_00000007.tmp-1")        # alive but old
+        for p in (live, dead, aged):
+            os.makedirs(p)
+        old = time.time() - 2 * manager.TMP_GC_AGE_S
+        os.utime(aged, (old, old))
+        cm = CheckpointManager(d, keep=3)
+        cm.save(1, {"x": np.ones(2)})
+        names = os.listdir(d)
+        assert os.path.basename(live) in names, \
+            "GC deleted a live concurrent writer's tmp dir"
+        assert os.path.basename(dead) not in names
+        assert os.path.basename(aged) not in names
+        assert cm.all_steps() == [1]
+
+
+# ---------------------------------------------------------------------------
+# SemanticCache round trip: lookups + spill victims identical
+# ---------------------------------------------------------------------------
+
+
+def _fill_cache(cache, rng, n, d=16):
+    from repro.core.store import CentroidStore
+    vecs = norm(rng.normal(size=(n, d)).astype(np.float32))
+    st = CentroidStore(d, d)
+    st.add(vecs, vecs, np.arange(n, 0, -1, dtype=np.float64),
+           answer_id=np.arange(n))
+    cache.set_centroids(st)
+    return vecs
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas", "hnsw"])
+def test_semantic_cache_state_roundtrip_identical_lookups(backend):
+    from repro.core.semantic_cache import SemanticCache
+    rng = np.random.default_rng(3)
+    d = 16
+    c1 = SemanticCache(d, d, capacity=40, backend=backend)
+    _fill_cache(c1, rng, 32, d)
+    # churn: lookups (count updates), spill inserts incl. LRU overwrites
+    for t in range(30):
+        q = norm(rng.normal(size=(3, d)).astype(np.float32))
+        c1.lookup(q, 0.8)
+        c1.insert_spill(q[0], q[0], answer_id=100 + t)
+
+    c2 = SemanticCache(d, d, capacity=40, backend=backend)
+    c2.load_state(c1.state_dict())
+    c2.rebuild_mirror()
+
+    for t in range(20):
+        q = norm(rng.normal(size=(4, d)).astype(np.float32))
+        assert_results_equal(c1.lookup(q, 0.8), c2.lookup(q, 0.8), t)
+        # identical spill-victim selection (same recency state restored)
+        v1 = int(np.argmin(c1._spill_last_use))
+        v2 = int(np.argmin(c2._spill_last_use))
+        assert v1 == v2, t
+        c1.insert_spill(q[1], q[1], answer_id=500 + t)
+        c2.insert_spill(q[1], q[1], answer_id=500 + t)
+        assert np.array_equal(c1.spill.ids, c2.spill.ids)
+    assert c1.hit_ratio == c2.hit_ratio
+
+
+def test_restore_does_not_advance_generation():
+    """The rebuild that re-materializes a snapshot reproduces the SAME
+    serving state: generation (stamped into every LookupResult) must not
+    move; a genuine refresh afterwards must still bump it."""
+    from repro.core.semantic_cache import SemanticCache
+    rng = np.random.default_rng(4)
+    c1 = SemanticCache(16, 16, capacity=32)
+    vecs = _fill_cache(c1, rng, 16)
+    r = c1.lookup(vecs[:2], 0.9)
+    gen = r.generation
+    c2 = SemanticCache(16, 16, capacity=32)
+    c2.load_state(c1.state_dict())
+    assert c2.lookup(vecs[:2], 0.9).generation == gen
+    c2.rebuild_mirror()     # idempotent: already built by the lookup
+    assert c2.lookup(vecs[:2], 0.9).generation == gen
+    _fill_cache(c2, rng, 16)        # a real refresh IS a new state
+    assert c2.lookup(vecs[:2], 0.9).generation == gen + 1
+
+
+# ---------------------------------------------------------------------------
+# DynamicThreshold round trip: continued traces identical
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_state_roundtrip_trace_equivalence():
+    from repro.core.threshold import DynamicThreshold, T2HTable
+    t2h = T2HTable.from_sims(np.linspace(0.5, 0.99, 200))
+    rng = np.random.default_rng(5)
+
+    def drive(thr, t0, n):
+        out = []
+        for k in range(n):
+            t = t0 + 0.3 * k
+            thr.observe_arrivals(t, int(rng.integers(1, 5)))
+            thr.observe_completion(float(rng.exponential(0.4)),
+                                   float(rng.exponential(0.3)))
+            out.append((thr.theta, thr.lam, thr.llm_latency, thr._bias))
+        return out
+
+    a = DynamicThreshold(t2h, slo_latency=0.5, llm_latency=0.3,
+                         lambda_window=2.0)
+    drive(a, 0.0, 50)
+    b = DynamicThreshold(t2h, slo_latency=0.5, llm_latency=0.3,
+                         lambda_window=2.0)
+    b.load_state(a.state_dict())
+    assert b.theta == a.theta and b.lam == a.lam
+    assert list(b.lam_trace) == list(a.lam_trace)
+    rng = np.random.default_rng(6)
+    tr_a = drive(a, 15.0, 50)
+    rng = np.random.default_rng(6)
+    tr_b = drive(b, 15.0, 50)
+    assert tr_a == tr_b
+    assert a.wait_error_stats() == b.wait_error_stats()
+
+
+# ---------------------------------------------------------------------------
+# SISO: save -> kill -> restore via CheckpointManager == uninterrupted
+# ---------------------------------------------------------------------------
+
+
+def _siso(refresh_async=False, **kw):
+    from repro.core.siso import SISO, SISOConfig
+    cfg = SISOConfig(dim=16, answer_dim=16, capacity=64, refresh_min=8,
+                     refresh_async=refresh_async, **kw)
+    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+
+
+def _serve(siso, rng, t0, steps, twin=None):
+    """Drive one (or two lockstep) SISO(s); returns per-step traces."""
+    trace = []
+    for k in range(steps):
+        t = float(t0 + k)
+        q = norm(rng.normal(size=(4, 16)).astype(np.float32))
+        res = siso.handle_batch(q.copy(), now=t, user_ids=np.arange(4) % 3)
+        if twin is not None:
+            res2 = twin.handle_batch(q.copy(), now=t,
+                                     user_ids=np.arange(4) % 3)
+            assert_results_equal(res, res2, k)
+        for b in range(4):
+            if not res.hit[b]:
+                for s in (siso, twin) if twin is not None else (siso,):
+                    s.record_llm_answer(q[b], q[b], answer_id=1000 + 4*k + b)
+        for s in (siso, twin) if twin is not None else (siso,):
+            s.observe_completion(0.3, 0.2)
+            s.refresh_tick()
+        trace.append(float(siso.theta_r))
+        if twin is not None:
+            assert siso.theta_r == twin.theta_r, k
+    return trace
+
+
+def test_siso_save_kill_restore_equivalence():
+    rng = np.random.default_rng(7)
+    s1 = _siso()
+    train = norm(rng.normal(size=(200, 16)).astype(np.float32))
+    s1.bootstrap(train, train, answer_ids=np.arange(200))
+    _serve(s1, rng, 0, 25)
+    from repro.checkpoint import CheckpointManager
+    with tempfile.TemporaryDirectory() as d:
+        CheckpointManager(d, keep=2).save(3, {"siso": s1.state_dict()})
+        # "kill": fresh objects, restore from disk only
+        step, rec = CheckpointManager(d, keep=2).restore_latest()
+        s2 = _siso()
+        s2.load_state(rec["siso"])
+        s2.warm_start()
+    assert s2.stats() == s1.stats()
+    _serve(s1, rng, 25, 25, twin=s2)    # asserts lockstep equivalence
+
+
+def test_siso_delta_snapshot_composition():
+    """full base + newest delta == live state (between refresh commits)."""
+    rng = np.random.default_rng(8)
+    s1 = _siso(refresh_frac=100.0)   # no refresh due during the window
+    train = norm(rng.normal(size=(200, 16)).astype(np.float32))
+    s1.bootstrap(train, train, answer_ids=np.arange(200))
+    _serve(s1, rng, 0, 10)
+    full = s1.state_dict()
+    epoch0 = s1.refresh_epoch
+    _serve(s1, rng, 10, 12)            # spill churn + controller movement
+    assert s1.refresh_epoch == epoch0  # same epoch: delta is valid
+    delta = s1.state_dict(delta=True)
+    s2 = _siso(refresh_frac=100.0)
+    s2.load_state(full)
+    s2.load_state(delta, delta=True)
+    s2.warm_start()
+    assert s2.stats() == s1.stats()
+    np.testing.assert_array_equal(s2.cache.centroids.access_count,
+                                  s1.cache.centroids.access_count)
+    _serve(s1, rng, 22, 15, twin=s2)
+
+
+def test_delta_against_wrong_epoch_is_rejected():
+    rng = np.random.default_rng(9)
+    s1 = _siso()
+    train = norm(rng.normal(size=(64, 16)).astype(np.float32))
+    s1.bootstrap(train, train, answer_ids=np.arange(64))
+    delta = s1.state_dict(delta=True)
+    # a later bootstrap rewrites the centroid region (new epoch)
+    train2 = norm(rng.normal(size=(24, 16)).astype(np.float32))
+    s1.bootstrap(train2, train2, answer_ids=np.arange(24))
+    base = s1.state_dict()
+    s2 = _siso()
+    s2.load_state(base)
+    with pytest.raises(ValueError, match="epoch"):
+        s2.load_state(delta, delta=True)
+
+
+# ---------------------------------------------------------------------------
+# RefreshPipeline: mid-cycle snapshot restarts to the identical result
+# ---------------------------------------------------------------------------
+
+
+def _stores_equal(a, b):
+    for f in ("vectors", "answers", "cluster_size", "access_count",
+              "answer_id", "ids"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+def _drive_to_active_pipeline(rng, phase_target=None):
+    s = _siso(refresh_async=True)
+    train = norm(rng.normal(size=(120, 16)).astype(np.float32))
+    s.bootstrap(train, train, answer_ids=np.arange(120))
+    for t in range(60):
+        q = norm(rng.normal(size=(2, 16)).astype(np.float32))
+        res = s.handle_batch(q, now=float(t))
+        for b in range(2):
+            if not res.hit[b]:
+                s.record_llm_answer(q[b], q[b], answer_id=200 + t)
+        if not s.pipeline.active:
+            s.refresh_tick(0.0)
+        if s.pipeline.active:
+            break
+    assert s.pipeline.active
+    if phase_target is not None:
+        while s.pipeline.phase != phase_target:
+            s.pipeline.step(0.0)
+            assert s.pipeline.active, \
+                f"cycle finished before reaching {phase_target}"
+    return s
+
+
+@pytest.mark.parametrize("phase_target", [None, "plan", "apply", "t2h"])
+def test_pipeline_midcycle_restore_converges_identically(phase_target):
+    rng = np.random.default_rng(11)
+    s1 = _drive_to_active_pipeline(rng, phase_target)
+    s2 = _siso(refresh_async=True)
+    s2.load_state(s1.state_dict())
+    s2.warm_start()
+    assert s2.refresh_epoch == s1.refresh_epoch
+    st1, st2 = s1.pipeline.finish(), s2.pipeline.finish()
+    assert (st1.merged, st1.added, st1.evicted) \
+        == (st2.merged, st2.added, st2.evicted)
+    _stores_equal(s1.cache.centroids, s2.cache.centroids)
+    np.testing.assert_array_equal(s1.t2h.hit_ratios, s2.t2h.hit_ratios)
+    assert s1.theta_r == s2.theta_r
+    assert s1.cache.generation == s2.cache.generation
+    q = norm(rng.normal(size=(8, 16)).astype(np.float32))
+    assert_results_equal(s1.cache.lookup(q, s1.theta_r, update_counts=False),
+                         s2.cache.lookup(q, s2.theta_r, update_counts=False))
+
+
+def test_refresh_epoch_ticks_at_commit_not_cycle_end():
+    rng = np.random.default_rng(12)
+    s = _drive_to_active_pipeline(rng, "t2h")
+    # commit has swapped the store but the cycle has not completed
+    assert s.pipeline.active
+    assert s.refresh_epoch == s.refreshes_completed + 1
+    s.pipeline.finish()
+    assert s.refresh_epoch == s.refreshes_completed
+
+
+# ---------------------------------------------------------------------------
+# gateway snapshot protocol invariants (no engine needed: SISO frontend +
+# a manager-level view of what lands on disk)
+# ---------------------------------------------------------------------------
+
+
+class _FakeSched:
+    """Minimal stand-in so ServingGateway-level snapshot plumbing can be
+    tested without building a ModelEngine."""
+    def __init__(self):
+        self.done, self.queue, self.active = [], [], {}
+        self._tick = 0
+
+
+def _gateway_shell(siso, d, delta_every=1):
+    from repro.serving.gateway import ServingGateway
+    gw = ServingGateway.__new__(ServingGateway)
+    gw.frontend = gw.siso = siso
+    gw.sched = _FakeSched()
+    from repro.serving.gateway import GatewayStats
+    from collections import deque
+    gw.stats = GatewayStats()
+    gw._done_cursor = 0
+    gw._served = {"cache": 0, "engine": 0}
+    gw._eng_wait_sum, gw._eng_wait_n = 0.0, 0
+    gw._eng_waits = deque(maxlen=8)
+    gw._slo_ok = gw._slo_n = 0
+    gw._completed_base = 0
+    gw._last_now = 0.0
+    gw.slo_latency = None
+    gw.ckpt = None
+    gw._delta_every = 0
+    gw._since_snap = gw._snap_step = 0
+    gw._snap_epoch = None
+    gw._full_steps = deque(maxlen=2)
+    gw.attach_persistence(d, keep=3, async_write=False,
+                          delta_every=delta_every)
+    return gw
+
+
+def test_attach_persistence_lays_down_a_base_full_immediately():
+    """Deltas written right after attach must have a full to compose
+    against — a crash before the first refresh/drain is recoverable."""
+    rng = np.random.default_rng(20)
+    s = _siso()
+    train = norm(rng.normal(size=(64, 16)).astype(np.float32))
+    s.bootstrap(train, train, answer_ids=np.arange(64))
+    with tempfile.TemporaryDirectory() as d:
+        gw = _gateway_shell(s, d)
+        assert gw.ckpt.all_steps(), "no base full at attach time"
+        gw.snapshot(full=False)          # a delta right away
+        s2 = _siso()
+        gw2 = _gateway_shell(s2, d)      # populated dir: no extra full
+        meta = gw2.warm_start()
+        assert meta["kind"] == "full+delta"
+        assert len(gw2.frontend.cache.centroids) == len(s.cache.centroids)
+
+
+def test_retention_never_strands_deltas_after_restart():
+    """Post-restart, the restored base full must be re-protected: delta
+    churn under keep=3 must not reap the only full snapshot."""
+    rng = np.random.default_rng(21)
+    s = _siso()
+    train = norm(rng.normal(size=(64, 16)).astype(np.float32))
+    s.bootstrap(train, train, answer_ids=np.arange(64))
+    with tempfile.TemporaryDirectory() as d:
+        gw = _gateway_shell(s, d)
+        for _ in range(2):
+            gw.snapshot(full=False)
+        # restart: fresh process image, fresh manager (empty protect set)
+        s2 = _siso()
+        gw2 = _gateway_shell(s2, d)
+        gw2.warm_start()
+        for _ in range(6):               # delta churn past keep=3
+            gw2.snapshot(full=False)
+        # the base full must still be on disk and restorable
+        s3 = _siso()
+        gw3 = _gateway_shell(s3, d)
+        meta = gw3.warm_start()
+        assert meta["kind"] == "full+delta"
+        assert gw3.frontend.cache.hit_ratio == s2.cache.hit_ratio
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device sharded plane: restore is shard-layout invariant
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_state_roundtrip_subprocess():
+    code = """
+import numpy as np, tempfile
+from repro.core.semantic_cache import SemanticCache
+from repro.core.store import CentroidStore
+from repro.distributed.cache_plane import ShardedCacheConfig
+from repro.checkpoint import CheckpointManager
+
+rng = np.random.default_rng(0)
+def norm(x): return x / np.linalg.norm(x, axis=-1, keepdims=True)
+D = 16
+vecs = norm(rng.normal(size=(48, D)).astype(np.float32))
+c1 = SemanticCache(D, D, capacity=64, shard=ShardedCacheConfig(n_shards=8))
+st = CentroidStore(D, D)
+st.add(vecs, vecs, np.arange(48, 0, -1, dtype=np.float64),
+       answer_id=np.arange(48))
+c1.set_centroids(st)
+for t in range(20):
+    q = norm(rng.normal(size=(3, D)).astype(np.float32))
+    c1.lookup(q, 0.8)
+    c1.insert_spill(q[0], q[0], answer_id=100 + t)
+state = c1.state_dict()
+assert int(state["layout"]["n_shards"]) == 8
+with tempfile.TemporaryDirectory() as d:
+    CheckpointManager(d, keep=1).save(1, {"cache": state})
+    _, rec = CheckpointManager(d, keep=1).restore_latest()
+# restore onto the SAME shard count and onto 1 device: both must serve
+# element-wise identically (the owner mapping is a pure function)
+c8 = SemanticCache(D, D, capacity=64, shard=ShardedCacheConfig(n_shards=8))
+c8.load_state(rec["cache"]); c8.rebuild_mirror()
+cs = SemanticCache(D, D, capacity=64)
+cs.load_state(rec["cache"]); cs.rebuild_mirror()
+for t in range(12):
+    q = norm(rng.normal(size=(4, D)).astype(np.float32))
+    r1, r8, rs = (c.lookup(q, 0.8) for c in (c1, c8, cs))
+    for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+        assert np.array_equal(getattr(r1, f), getattr(r8, f)), (t, f, "8")
+        assert np.array_equal(getattr(r1, f), getattr(rs, f)), (t, f, "1")
+    assert r1.generation == r8.generation == rs.generation
+    for c in (c1, c8, cs):
+        c.insert_spill(q[2], q[2], answer_id=300 + t)
+    assert np.array_equal(c1._spill_last_use, c8._spill_last_use)
+    assert np.array_equal(c1._spill_last_use, cs._spill_last_use)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

@@ -56,6 +56,21 @@ METRICS = [
     ("BENCH_shard.json", "latency[-1].equal_to_reference",
      "true", None, None,
      "sharded lookup element-wise identical to 1-device reference"),
+    ("BENCH_restart.json", "drill.identical",
+     "true", None, None,
+     "warm restart element-wise identical to the uninterrupted run"),
+    ("BENCH_restart.json", "drill.hit_ratio_warm_b",
+     "higher", "abs", 0.05,
+     "post-restart hit ratio (phase after recovery)"),
+    ("BENCH_restart.json", "drill.warm_minus_cold_early",
+     "higher", "abs", 0.05,
+     "warm-restart hit-ratio advantage over a cold start, early window"),
+    ("BENCH_restart.json", "drill.recovery_s",
+     "lower", "factor", 10.0,
+     "warm-restart recovery wall-clock (generous: runner variance)"),
+    ("BENCH_restart.json", "crash.recovered",
+     "true", None, None,
+     "hard-crash (SIGKILL) recovery restored a serving snapshot"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
