@@ -31,6 +31,7 @@ BENCHES = [
     "bench_refresh",        # EXPERIMENTS.md §Refresh non-blocking refresh
     "bench_shard",          # EXPERIMENTS.md §Shard mesh cache plane
     "bench_restart",        # EXPERIMENTS.md §Restart kill-and-recover drill
+    "bench_tiered",         # EXPERIMENTS.md §Tiered hierarchy drill
 ]
 
 

@@ -4,6 +4,8 @@ from repro.core.semantic_cache import SemanticCache
 from repro.core.siso import SISO, SISOConfig
 from repro.core.store import CentroidStore
 from repro.core.threshold import DynamicThreshold, T2HTable
+from repro.core.tiered import (TieredCache, TieredCacheConfig, TierPolicy)
 
 __all__ = ["CacheManager", "RefreshPipeline", "SemanticCache", "SISO",
-           "SISOConfig", "CentroidStore", "DynamicThreshold", "T2HTable"]
+           "SISOConfig", "CentroidStore", "DynamicThreshold", "T2HTable",
+           "TieredCache", "TieredCacheConfig", "TierPolicy"]

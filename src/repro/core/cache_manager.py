@@ -239,18 +239,31 @@ def merge_centroids_reference(c_cur: CentroidStore, c_repo: CentroidStore,
 
 
 def filter_centroids(c_new: CentroidStore, capacity: int,
-                     decay: float = 1.1) -> tuple[CentroidStore, int]:
-    """capacity: max number of entries (TotalMemoryUsage / bytes_per_entry)."""
+                     decay: float = 1.1, collect_evicted: bool = False):
+    """capacity: max number of entries (TotalMemoryUsage / bytes_per_entry).
+
+    With ``collect_evicted`` the return gains a third element: a store of
+    the evicted rows (pre-decay field values — they left before lines
+    19-21 applied), so a tiered hierarchy can demote cold centroids
+    instead of discarding them (DESIGN.md §13)."""
     evicted = 0
+    evicted_store = None
     if len(c_new) > capacity:
         # ascending (cluster_size, access_count); evict the prefix
         order = np.lexsort((c_new.access_count, c_new.cluster_size))
         keep = np.sort(order[len(c_new) - capacity:])
         evicted = len(c_new) - capacity
+        if collect_evicted:
+            evicted_store = c_new.copy()
+            evicted_store.take(np.sort(order[:evicted]))
         c_new.take(keep)
+    elif collect_evicted:
+        evicted_store = CentroidStore(c_new.dim, c_new.answer_dim)
     # lines 19-21: decay semantic locality; reset short-term popularity
     c_new.cluster_size = c_new.cluster_size / decay
     c_new.access_count = np.zeros_like(c_new.access_count)
+    if collect_evicted:
+        return c_new, evicted, evicted_store
     return c_new, evicted
 
 
@@ -264,8 +277,12 @@ class CacheManager:
         self.update_group = update_group
 
     def plan(self, c_cur: CentroidStore, c_repo: CentroidStore,
-             capacity: int) -> tuple[CentroidStore, RefreshStats]:
+             capacity: int, collect_evicted: bool = False):
         c_new, stats = merge_centroids(c_cur, c_repo, self.theta_c)
+        if collect_evicted:
+            c_new, stats.evicted, evicted = filter_centroids(
+                c_new, capacity, self.decay, collect_evicted=True)
+            return c_new, stats, evicted
         c_new, stats.evicted = filter_centroids(c_new, capacity, self.decay)
         return c_new, stats
 

@@ -141,8 +141,17 @@ class RefreshPipeline:
             return
         c_new, stats = self._planner.result()
         self._planner = None
-        c_new, stats.evicted = filter_centroids(
-            c_new, self.siso.cfg.capacity, self.siso.manager.decay)
+        if getattr(self.siso.cache, "evict_sink", None) is not None:
+            # tiered hierarchy (DESIGN.md §13): keep the filter's evicted
+            # centroids — the commit demotes them instead of discarding
+            c_new, stats.evicted, self._evicted = filter_centroids(
+                c_new, self.siso.centroid_capacity,
+                self.siso.manager.decay, collect_evicted=True)
+        else:
+            c_new, stats.evicted = filter_centroids(
+                c_new, self.siso.centroid_capacity,
+                self.siso.manager.decay)
+            self._evicted = None
         # final store in the cache's locality-first layout, rebuilt through
         # a fresh add() so ids match the synchronous staging path exactly
         final = CentroidStore(self.siso.cfg.dim, self.siso.cfg.answer_dim)
@@ -176,6 +185,16 @@ class RefreshPipeline:
         self._carry_access_counts()
         self.siso.cache.commit_shadow(self._final)
         self._final = None
+        ev = getattr(self, "_evicted", None)
+        if ev is not None and len(ev):
+            # demote cold centroids after the swap: the new region is live,
+            # so the demoted entries can never coexist with their former
+            # device rows (DESIGN.md §13)
+            sink = getattr(self.siso.cache, "evict_sink", None)
+            if sink is not None:
+                sink(ev.vectors, ev.answers, ev.answer_id, ev.cluster_size,
+                     ev.access_count, "refresh_evict")
+        self._evicted = None
         # T2H sample exactly as the synchronous path draws it (§4.1: 5%
         # of the fresh queries), probed against the NEW state
         self._t2h_sample = self.siso.draw_t2h_sample(self._vecs, self._rng)
@@ -253,6 +272,7 @@ class RefreshPipeline:
         # overlays) is discarded wholesale
         self._detector = self._planner = None
         self._raw = self._final = None
+        self._evicted = None
         self.cycles = int(state["cycles"])
         self.ticks = int(state["ticks"])
         phase = str(np.asarray(state["phase"]))

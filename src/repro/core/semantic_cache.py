@@ -154,9 +154,7 @@ class SemanticCache:
         # mesh path IS the single-device path, bit for bit (DESIGN.md §11)
         self.shard = shard if shard is not None and shard.n_shards > 1 \
             else None
-        if self.shard is not None and backend == "hnsw":
-            raise ValueError("sharded cache plane needs a device-resident "
-                             "backend (dense/pallas); hnsw is host-graph")
+        self._reject_hnsw_shard()
         self.centroids = CentroidStore(dim, answer_dim)
         self.spill = CentroidStore(dim, answer_dim)
         self._spill_clock = 0
@@ -183,6 +181,24 @@ class SemanticCache:
         # (restored lookups stay element-wise identical to an
         # uninterrupted run, DESIGN.md §12)
         self._restore_pending = False
+        # demotion tap (DESIGN.md §13): when set, every evicted entry
+        # (spill LRU victim, spill trim, Algorithm-1 filter eviction) is
+        # handed to the sink as
+        #   sink(vectors, answers, answer_id, cluster_size, access_count,
+        #        kind)
+        # instead of being silently discarded. None (the default) keeps
+        # every eviction path bit-identical to the single-tier behavior.
+        self.evict_sink = None
+
+    def _reject_hnsw_shard(self) -> None:
+        """The hnsw backend serves from a host graph and would silently
+        ignore a sharded device plane. Checked at construction AND at
+        every graph lookup — the serving-time check catches configs that
+        reach the hnsw branch through post-construction mutation, which
+        the constructor guard alone let fall through silently."""
+        if self.shard is not None and self.backend == "hnsw":
+            raise ValueError("sharded cache plane needs a device-resident "
+                             "backend (dense/pallas); hnsw is host-graph")
 
     # ----------------------------------------------------------------- state
 
@@ -205,9 +221,41 @@ class SemanticCache:
         commit_shadow so both refresh paths trim identically)."""
         if len(self.spill) > self.spill_capacity:  # spill shrank
             drop = len(self.spill) - self.spill_capacity
-            keep = np.sort(np.argsort(self._spill_last_use)[drop:])
+            order = np.argsort(self._spill_last_use)
+            dead = None
+            if self.evict_sink is not None:
+                rows = np.sort(order[:drop])
+                dead = (self.spill.vectors[rows].copy(),
+                        self.spill.answers[rows].copy(),
+                        self.spill.answer_id[rows].copy(),
+                        self.spill.cluster_size[rows].copy(),
+                        self.spill.access_count[rows].copy())
+            keep = np.sort(order[drop:])
             self.spill.take(keep)
             self._spill_last_use = self._spill_last_use[keep]
+            if dead is not None:    # sink fires after the rows left
+                self.evict_sink(*dead, "spill_trim")
+
+    def drop_spill_ids(self, answer_ids: np.ndarray) -> int:
+        """Remove spill rows whose answer identity (>= 0) appears in
+        ``answer_ids``. The tiered wrapper calls this right before a
+        refresh commit: a logged answer promoted into the new centroid
+        region must not keep a second live copy in its spill staging row
+        (DESIGN.md §13 one-copy-per-identity). Invalidates the device
+        mirror — callers run it immediately before a commit that rebuilds
+        or swaps the mirror anyway, so no extra upload happens."""
+        ids = np.asarray(answer_ids)
+        ids = ids[ids >= 0]
+        if not len(ids) or not len(self.spill):
+            return 0
+        dup = np.isin(self.spill.answer_id, ids)
+        n = int(dup.sum())
+        if n:
+            keep = np.where(~dup)[0]
+            self.spill.take(keep)
+            self._spill_last_use = self._spill_last_use[keep]
+            self._invalidate()
+        return n
 
     def apply_chunk(self, chunk: CentroidStore, first: bool) -> None:
         """Progressive update entry point (CacheManager.update_chunks)."""
@@ -496,6 +544,7 @@ class SemanticCache:
 
     def _hnsw_lookup(self, queries: np.ndarray):
         from repro.core.hnsw import HNSW
+        self._reject_hnsw_shard()   # serving-time guard, not just __init__
         if self._hnsw is None:
             vecs = np.concatenate([self.centroids.vectors, self.spill.vectors]) \
                 if len(self.spill) else self.centroids.vectors
@@ -523,12 +572,15 @@ class SemanticCache:
     # ----------------------------------------------------------------- spill
 
     def insert_spill(self, vector: np.ndarray, answer: np.ndarray,
-                     answer_id: int = -1) -> None:
+                     answer_id: int = -1, cluster_size: float = 1.0) -> None:
         """LRU insert of an individual query vector into free space.
 
         The device mirror is patched in place (one donated row write); a
         full rebuild only happens when the padded matrix must grow, which
         pow2 sizing makes O(log capacity) times over the cache lifetime.
+        ``cluster_size`` defaults to 1 (an individual vector); the tiered
+        promotion path passes the entry's real locality weight through so
+        a later demotion keeps it (DESIGN.md §13).
         """
         if not self.spill_lru or self.spill_capacity == 0:
             return
@@ -536,11 +588,24 @@ class SemanticCache:
         self._spill_clock += 1
         if len(self.spill) >= self.spill_capacity:
             victim = int(np.argmin(self._spill_last_use))
-            self.spill.set_row(victim, vector, answer, answer_id)
+            # copies: set_row overwrites these slots in place below; the
+            # sink fires only AFTER the row left the device so a tiered
+            # sink sees a consistent "not in device anymore" view
+            dead = (self.spill.vectors[victim:victim + 1].copy(),
+                    self.spill.answers[victim:victim + 1].copy(),
+                    self.spill.answer_id[victim:victim + 1].copy(),
+                    self.spill.cluster_size[victim:victim + 1].copy(),
+                    self.spill.access_count[victim:victim + 1].copy()) \
+                if self.evict_sink is not None else None
+            self.spill.set_row(victim, vector, answer, answer_id,
+                               cluster_size=cluster_size)
             self._spill_last_use[victim] = self._spill_clock
+            if dead is not None:
+                self.evict_sink(*dead, "spill_evict")
             row = nc + victim
         else:
-            self.spill.add(vector, answer, 1.0, answer_id=answer_id)
+            self.spill.add(vector, answer, cluster_size,
+                           answer_id=answer_id)
             self._spill_last_use = np.append(self._spill_last_use,
                                              self._spill_clock)
             row = nc + len(self.spill) - 1

@@ -20,6 +20,7 @@ from repro.core.refresh import RefreshPipeline
 from repro.core.semantic_cache import LookupResult, SemanticCache
 from repro.core.store import CentroidStore
 from repro.core.threshold import DynamicThreshold, T2HTable
+from repro.core.tiered import TieredCache, TieredCacheConfig
 from repro.distributed.cache_plane import ShardedCacheConfig
 
 
@@ -51,6 +52,10 @@ class SISOConfig:
                                      # plane (DESIGN.md §11); None or
                                      # n_shards=1 keeps the single-device
                                      # hot path bit-identical
+    tiered: Optional[TieredCacheConfig] = None
+                                     # device → host → disk hierarchy
+                                     # (DESIGN.md §13); None keeps the
+                                     # single-tier path bit-identical
 
 
 class SISO:
@@ -61,6 +66,8 @@ class SISO:
                                    backend=cfg.backend,
                                    spill_lru=cfg.spill_lru,
                                    shard=cfg.shard)
+        if cfg.tiered is not None:     # device→host→disk (DESIGN.md §13)
+            self.cache = TieredCache(self.cache, cfg.tiered)
         self.manager = CacheManager(theta_c=cfg.theta_c)
         self.t2h = T2HTable(np.array([cfg.theta_r]), np.array([0.0]))
         self.threshold = DynamicThreshold(
@@ -80,6 +87,14 @@ class SISO:
     def theta_r(self) -> float:
         return self.threshold.theta if self.cfg.dynamic_threshold \
             else self.cfg.theta_r
+
+    @property
+    def centroid_capacity(self) -> int:
+        """Rows the refresh may fill with centroids. Tiered configs can
+        reserve device rows for the spill so promotions from the warm and
+        cold tiers always have somewhere to land (DESIGN.md §13)."""
+        reserve = self.cfg.tiered.device_reserve if self.cfg.tiered else 0
+        return max(1, self.cfg.capacity - reserve)
 
     def handle_batch(self, vectors: np.ndarray, now: float = 0.0,
                      user_ids: Optional[np.ndarray] = None) -> LookupResult:
@@ -117,6 +132,11 @@ class SISO:
                             int(res.entry[b])] -= 1.0
                     elif res.region[b] == 1:
                         escaped_spill.append((b, int(res.entry[b]) - nc))
+                    elif res.region[b] >= 2:
+                        # warm/cold tier phantom hit (DESIGN.md §13):
+                        # revert popularity, cancel the queued promotion
+                        self.cache.undo_tier_hit(int(res.entry[b]),
+                                                 int(res.region[b]))
                     self.cache.hits -= 1
                     self.cache.misses += 1
                     res.hit[b] = False
@@ -263,6 +283,10 @@ class SISO:
         Returns the finished cycle's stats on its completing tick. With
         cfg.refresh_async=False this degrades to the blocking refresh().
         """
+        if hasattr(self.cache, "promote_tick"):
+            # tiered hierarchy (DESIGN.md §13): warm/cold hits queued for
+            # promotion are applied here, off the lookup path, bounded
+            self.cache.promote_tick()
         if not self.cfg.refresh_async:
             if self.needs_refresh() and self._log_vecs:
                 return self.refresh()
@@ -288,6 +312,8 @@ class SISO:
         e.g. the gateway's drain()). Returns the last finished cycle's
         stats, or None if nothing was due."""
         out = None
+        if hasattr(self.cache, "promote_drain"):
+            self.cache.promote_drain()   # offline moment: flush the tiers
         if not self.cfg.refresh_async:
             if self.needs_refresh() and self._log_vecs:
                 out = self.refresh()
@@ -305,13 +331,24 @@ class SISO:
                            t2h_sample: Optional[np.ndarray] = None,
                            rng: Optional[np.random.Generator] = None
                            ) -> RefreshStats:
-        c_new, stats = self.manager.plan(self.cache.centroids, repo,
-                                         self.cfg.capacity)
+        sink = getattr(self.cache, "evict_sink", None)
+        if sink is not None:    # tiered: demote filter evictions (§13)
+            c_new, stats, evicted = self.manager.plan(
+                self.cache.centroids, repo, self.centroid_capacity,
+                collect_evicted=True)
+        else:
+            evicted = None
+            c_new, stats = self.manager.plan(self.cache.centroids, repo,
+                                             self.centroid_capacity)
         first = True
         for chunk in self.manager.update_chunks(c_new):  # progressive update
             self.cache.apply_chunk(chunk, first)
             first = False
         self.cache.finish_update()
+        if sink is not None and evicted is not None and len(evicted):
+            sink(evicted.vectors, evicted.answers, evicted.answer_id,
+                 evicted.cluster_size, evicted.access_count,
+                 "refresh_evict")
         # T2H from a 5% sample of the fresh queries
         if t2h_sample is None and len(fresh_vectors):
             t2h_sample = self.draw_t2h_sample(fresh_vectors, rng)
@@ -403,7 +440,7 @@ class SISO:
 
     def stats(self) -> dict:
         thr = self.threshold
-        return {
+        out = {
             "hit_ratio": self.cache.hit_ratio,
             "hits": self.cache.hits,
             "misses": self.cache.misses,
@@ -424,3 +461,6 @@ class SISO:
             "cache_shards": (self.cache.shard.n_shards
                              if self.cache.shard is not None else 1),
         }
+        if hasattr(self.cache, "tier_stats"):   # hierarchy (DESIGN.md §13)
+            out["tiers"] = self.cache.tier_stats()
+        return out

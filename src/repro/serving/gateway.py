@@ -486,4 +486,8 @@ class ServingGateway:
                 dev = cache._dev
                 if dev is not None:
                     rep["cache_rows_per_shard"] = dev.pad
+        if cache is not None and hasattr(cache, "tier_stats"):
+            # tiered hierarchy (DESIGN.md §13): per-tier hit / promotion /
+            # demotion counters ride in every report
+            rep["tiers"] = cache.tier_stats()
         return rep

@@ -545,3 +545,124 @@ print("OK")
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Tiered hierarchy: save -> SIGKILL -> warm_start == uninterrupted run
+# ---------------------------------------------------------------------------
+
+# shared scaffolding: the child process and the in-process reference run
+# execute the SAME builder + driver source, so any divergence is a real
+# restore bug and never driver drift
+_TIERED_SCAFFOLD = """
+import numpy as np
+from repro.core.siso import SISO, SISOConfig
+from repro.core.tiered import TieredCacheConfig
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+def make(disk_dir):
+    # blocking refresh: the async pipeline legally RESTARTS a mid-cycle
+    # refresh on restore (same converged state, different tick count), so
+    # a cross-process lockstep drill needs the synchronous path
+    cfg = SISOConfig(dim=16, answer_dim=16, capacity=24, refresh_min=8,
+                     refresh_async=False,
+                     tiered=TieredCacheConfig(host_capacity=32,
+                                              disk_capacity=128,
+                                              disk_dir=disk_dir,
+                                              device_reserve=6,
+                                              promote_budget=4))
+    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+
+def drive(s, seed, t0, steps):
+    rng = np.random.default_rng(seed)
+    for k in range(steps):
+        q = norm(rng.normal(size=(4, 16)).astype(np.float32))
+        res = s.handle_batch(q.copy(), now=float(t0 + k),
+                             user_ids=np.arange(4) % 3)
+        for b in range(4):
+            if not res.hit[b]:
+                s.record_llm_answer(q[b], q[b],
+                                    answer_id=10_000 + 4 * (t0 + k) + b)
+        s.observe_completion(0.3, 0.2)
+        s.refresh_tick(0.0)   # one unit per tick: wall-clock budgets are
+                              # nondeterministic across processes
+
+def populate(s):
+    rng = np.random.default_rng(11)
+    train = norm(rng.normal(size=(120, 16)).astype(np.float32))
+    s.bootstrap(train, train, answer_ids=np.arange(120))
+    drive(s, 12, 0, 40)
+"""
+
+_TIERED_CHILD = _TIERED_SCAFFOLD + """
+import os, signal
+from repro.checkpoint import CheckpointManager
+
+base = os.environ["TIERED_DRILL_DIR"]
+s = make(os.path.join(base, "cold"))
+populate(s)
+CheckpointManager(os.path.join(base, "ckpt"), keep=2).save(
+    1, {"siso": s.state_dict()})
+# hard crash: no atexit, no flush, no goodbye — the snapshot must carry
+# the full three-tier hierarchy on its own
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def test_tiered_save_sigkill_warmstart_equivalence(tmp_path):
+    """A populated 3-tier hierarchy snapshotted and then SIGKILLed must
+    warm-start with tier membership and per-tier counters element-wise
+    identical to an uninterrupted run, and keep serving in lockstep."""
+    import signal
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env["TIERED_DRILL_DIR"] = str(tmp_path)
+    out = subprocess.run([sys.executable, "-c", _TIERED_CHILD], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == -signal.SIGKILL, out.stderr[-3000:]
+
+    ns = {}
+    exec(compile(_TIERED_SCAFFOLD, "<tiered-scaffold>", "exec"), ns)
+    # uninterrupted reference: same builder + driver, its own cold dir
+    s1 = ns["make"](str(tmp_path / "ref_cold"))
+    ns["populate"](s1)
+
+    from repro.checkpoint import CheckpointManager
+    step, rec = CheckpointManager(str(tmp_path / "ckpt"),
+                                  keep=2).restore_latest()
+    assert step == 1
+    s2 = ns["make"](str(tmp_path / "cold"))
+    s2.load_state(rec["siso"])
+    s2.warm_start()
+
+    m1, m2 = s1.cache.tier_membership(), s2.cache.tier_membership()
+    assert set(m1) == set(m2) == {"device", "host", "disk"}
+    for tier in m1:
+        np.testing.assert_array_equal(m1[tier], m2[tier], err_msg=tier)
+    assert len(m1["host"]) > 0 and len(m1["disk"]) > 0   # really 3 tiers
+
+    def stats_no_layout(cache):
+        # snapshotting force-flushes the pending disk buffer, so the
+        # restored run legally carries one extra segment: compare serving
+        # counters, not the cold store's file layout
+        st = cache.tier_stats()
+        st.pop("disk_segments")
+        return st
+
+    assert stats_no_layout(s1.cache) == stats_no_layout(s2.cache)
+    assert s1.cache.tier_hits == s2.cache.tier_hits
+    assert (s1.cache.hits, s1.cache.misses) == (s2.cache.hits,
+                                                s2.cache.misses)
+    assert s1.cache.clock == s2.cache.clock
+
+    # continued serving stays in lockstep (phase B, fresh seed)
+    ns["drive"](s1, 13, 40, 15)
+    ns["drive"](s2, 13, 40, 15)
+    for tier, a in s1.cache.tier_membership().items():
+        np.testing.assert_array_equal(a, s2.cache.tier_membership()[tier],
+                                      err_msg=tier)
+    assert s1.cache.tier_stats() == s2.cache.tier_stats()
+    assert s1.stats() == s2.stats()

@@ -1,0 +1,413 @@
+"""Tiered cache hierarchy: device → host → disk (DESIGN.md §13).
+
+Covers the fall-through lookup order, promotion exactness (same answer
+bytes, fresh device row), lossless disk round-trips, bit-identical
+1-tier degradation, the randomized tier-membership invariant, and the
+hnsw+shard guard regression (construction AND serving time).
+"""
+import numpy as np
+import pytest
+
+from repro.core.semantic_cache import SemanticCache
+from repro.core.store import CentroidStore
+from repro.core.tiered import (REGION_DISK, REGION_HOST, TieredCache,
+                               TieredCacheConfig, TierPolicy)
+
+DIM, ADIM = 16, 8
+
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def unit(rng, n, d=DIM):
+    return norm(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def mk_tiered(tmp_path, capacity=8, host=16, disk=64, **kw):
+    dev = SemanticCache(DIM, ADIM, capacity)
+    cfg = TieredCacheConfig(host_capacity=host, disk_capacity=disk,
+                            disk_dir=str(tmp_path / "cold") if disk else None,
+                            **kw)
+    return TieredCache(dev, cfg)
+
+
+def fill_centroids(cache, rng, n, id_base=0):
+    """Install n centroids with known ids; returns their vectors."""
+    v = unit(rng, n)
+    st = CentroidStore(DIM, ADIM)
+    st.add(v, rng.normal(size=(n, ADIM)).astype(np.float32),
+           np.arange(n, 0, -1, dtype=np.float64),
+           answer_id=np.arange(id_base, id_base + n))
+    cache.set_centroids(st)
+    return v
+
+
+def live_ids(cache):
+    """Per-tier sets of live answer identities (>= 0)."""
+    m = cache.tier_membership()
+    return {k: set(np.asarray(v)[np.asarray(v) >= 0].tolist())
+            for k, v in m.items()}
+
+
+# ---------------------------------------------------------------------------
+# fall-through correctness
+# ---------------------------------------------------------------------------
+
+
+def test_fall_through_device_miss_host_hit(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    vec = unit(rng, 1)
+    ans = rng.normal(size=(1, ADIM)).astype(np.float32)
+    cache.host.add(vec, ans, np.array([100]), np.array([3.0]),
+                   np.array([0.0]), clock=0)
+    res = cache.lookup(vec, 0.9)
+    assert bool(res.hit[0])
+    assert int(res.region[0]) == REGION_HOST
+    np.testing.assert_array_equal(res.answer[0], ans[0])
+    assert int(res.answer_id[0]) == 100
+    assert cache.tier_hits == {"device": 0, "host": 1, "disk": 0}
+    assert cache.hits == 1 and cache.misses == 0
+
+
+def test_fall_through_host_miss_disk_hit(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    # host holds an unrelated entry so the host probe runs and misses
+    cache.host.add(unit(rng, 1), np.zeros((1, ADIM), np.float32),
+                   np.array([50]), np.array([1.0]), np.array([0.0]), clock=0)
+    vec = unit(rng, 1)
+    ans = rng.normal(size=(1, ADIM)).astype(np.float32)
+    cache.disk.append(vec, ans, np.array([200]), np.array([1.0]),
+                      np.array([0.0]), clock=0)
+    for flushed in (False, True):   # pending RAM buffer AND segment file
+        if flushed:
+            cache.disk.flush()
+        res = cache.lookup(vec, 0.9)
+        assert bool(res.hit[0]) and int(res.region[0]) == REGION_DISK
+        np.testing.assert_array_equal(res.answer[0], ans[0])
+        assert int(res.answer_id[0]) == 200
+    assert cache.tier_hits["disk"] == 2
+
+
+def test_fall_through_miss_counts_once(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    cache.host.add(unit(rng, 1), np.zeros((1, ADIM), np.float32),
+                   np.array([50]), np.array([1.0]), np.array([0.0]), clock=0)
+    cache.disk.append(unit(rng, 1), np.zeros((1, ADIM), np.float32),
+                      np.array([60]), np.array([1.0]), np.array([0.0]),
+                      clock=0)
+    res = cache.lookup(unit(rng, 2), 0.999)
+    assert not res.hit.any() and (res.region == -1).all()
+    # one miss per query, not one per probed tier
+    assert cache.misses == 2 and cache.hits == 0
+
+
+def test_t2h_probe_has_no_side_effects(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    vec = unit(rng, 1)
+    cache.host.add(vec, np.ones((1, ADIM), np.float32), np.array([7]),
+                   np.array([1.0]), np.array([0.0]), clock=0)
+    res = cache.lookup(vec, 0.9, update_counts=False)
+    assert bool(res.hit[0]) and int(res.region[0]) == REGION_HOST
+    assert cache.hits == 0 and cache.misses == 0 and cache.clock == 0
+    assert cache.tier_hits["host"] == 0
+    assert len(cache._promo) == 0   # probes never enqueue promotions
+
+
+# ---------------------------------------------------------------------------
+# promotion
+# ---------------------------------------------------------------------------
+
+
+def test_promotion_installs_exact_bytes_and_fresh_device_row(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)          # spill room: 8 - 4 = 4
+    vec = unit(rng, 1)
+    ans = rng.normal(size=(1, ADIM)).astype(np.float32)
+    cache.host.add(vec, ans, np.array([100]), np.array([5.0]),
+                   np.array([2.0]), clock=0)
+    res = cache.lookup(vec, 0.9)
+    assert int(res.region[0]) == REGION_HOST
+    writes0 = cache.dev_row_writes
+    assert cache.promote_tick() == 1
+    # the entry moved: host emptied, the device spill owns the identity
+    assert len(cache.host) == 0
+    assert 100 in cache.device.spill.answer_id
+    row = int(np.flatnonzero(cache.device.spill.answer_id == 100)[0])
+    np.testing.assert_array_equal(cache.device.spill.answers[row], ans[0])
+    # locality weight survives the promotion
+    assert cache.device.spill.cluster_size[row] == 5.0
+    # the mirror was patched with a fresh donated row write (no rebuild)
+    assert cache.dev_row_writes == writes0 + 1
+    assert cache.promotions == 1
+    # the next lookup is served from the device, byte-identical
+    res2 = cache.lookup(vec, 0.9)
+    assert int(res2.region[0]) == 1      # spill region
+    np.testing.assert_array_equal(res2.answer[0], res.answer[0])
+
+
+def test_promotion_from_disk_tombstones_cold_copy(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    vec = unit(rng, 1)
+    ans = rng.normal(size=(1, ADIM)).astype(np.float32)
+    cache.disk.append(vec, ans, np.array([300]), np.array([2.0]),
+                      np.array([0.0]), clock=0)
+    cache.disk.flush()
+    res = cache.lookup(vec, 0.9)
+    assert int(res.region[0]) == REGION_DISK
+    cache.promote_drain()
+    assert cache.disk.live_count == 0          # tombstoned, not duplicated
+    assert 300 in cache.device.spill.answer_id
+    res2 = cache.lookup(vec, 0.9)
+    assert int(res2.region[0]) == 1
+    np.testing.assert_array_equal(res2.answer[0], ans[0])
+
+
+def test_undo_tier_hit_reverts_promotion_and_popularity(tmp_path, rng):
+    cache = mk_tiered(tmp_path)
+    fill_centroids(cache, rng, 4)
+    vec = unit(rng, 1)
+    cache.host.add(vec, np.ones((1, ADIM), np.float32), np.array([9]),
+                   np.array([1.0]), np.array([0.0]), clock=0)
+    res = cache.lookup(vec, 0.9)
+    assert len(cache._promo) == 1
+    ac = float(cache.host.store.access_count[0])
+    cache.undo_tier_hit(int(res.entry[0]), int(res.region[0]))
+    assert len(cache._promo) == 0 and len(cache._promo_set) == 0
+    assert float(cache.host.store.access_count[0]) == ac - 1.0
+    assert cache.tier_hits["host"] == 0
+
+
+# ---------------------------------------------------------------------------
+# demotion / disk round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_demotion_round_trips_through_disk_losslessly(tmp_path, rng):
+    # disk-only hierarchy: every device eviction lands cold
+    cache = mk_tiered(tmp_path, capacity=4, host=0, disk=64)
+    fill_centroids(cache, rng, 2)          # spill room: 2
+    vecs = unit(rng, 3)
+    answers = rng.normal(size=(3, ADIM)).astype(np.float32)
+    for i in range(3):                      # third insert evicts the LRU
+        cache.insert_spill(vecs[i], answers[i], answer_id=500 + i)
+    assert cache.demotions["disk"] == 1 and cache.drops == 0
+    assert 500 in np.asarray(cache.disk.answer_id)[cache.disk.live]
+    # cold read returns the exact original bytes (pre- and post-flush)
+    res = cache.lookup(vecs[0:1], 0.99)
+    assert int(res.region[0]) == REGION_DISK
+    np.testing.assert_array_equal(res.answer[0], answers[0])
+    cache.disk.flush()
+    res = cache.lookup(vecs[0:1], 0.99)
+    np.testing.assert_array_equal(res.answer[0], answers[0])
+    # ...and promoting it back re-installs the identical answer
+    cache.promote_drain()
+    res2 = cache.lookup(vecs[0:1], 0.99)
+    assert int(res2.region[0]) == 1
+    np.testing.assert_array_equal(res2.answer[0], answers[0])
+
+
+def test_host_overflow_demotes_coldest_to_disk(tmp_path, rng):
+    cache = mk_tiered(tmp_path, capacity=4, host=4, disk=64)
+    fill_centroids(cache, rng, 4)          # device full: inserts land warm
+    vecs = unit(rng, 6)
+    for i in range(6):
+        cache.insert_spill(vecs[i], np.full(ADIM, float(i), np.float32),
+                           answer_id=700 + i)
+    assert len(cache.host) == 4            # capacity enforced
+    assert cache.disk.live_count == 2      # overflow went cold, not dropped
+    assert cache.drops == 0
+    ids = live_ids(cache)
+    assert ids["host"] | ids["disk"] == {700 + i for i in range(6)}
+    assert not ids["host"] & ids["disk"]
+
+
+def test_config_requires_disk_dir():
+    with pytest.raises(ValueError, match="disk_dir"):
+        TieredCache(SemanticCache(DIM, ADIM, 8),
+                    TieredCacheConfig(disk_capacity=10))
+
+
+def test_policy_clamps_infinite_popularity():
+    # fresh centroids carry access_count=inf; the policy must not produce
+    # inf/nan hotness (it would pin them in the warm tier forever)
+    p = TierPolicy()
+    hot = p.hotness(np.array([4.0]), np.array([np.inf]), np.array([0]),
+                    10, np.array([64.0]))
+    assert np.isfinite(hot).all()
+    assert p.select_tier(hot, True, True)[0] in (0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# 1-tier degradation: bit-identical to the bare SemanticCache
+# ---------------------------------------------------------------------------
+
+
+def test_single_tier_config_is_bit_identical(tmp_path, rng):
+    plain = SemanticCache(DIM, ADIM, 8)
+    wrapped = TieredCache(SemanticCache(DIM, ADIM, 8),
+                          TieredCacheConfig())   # no host, no disk
+    assert wrapped.device.evict_sink is None     # demotion tap not installed
+    seed = rng.integers(2**31)
+    for cache in (plain, wrapped):
+        r = np.random.default_rng(seed)
+        v = unit(r, 6)
+        st = CentroidStore(DIM, ADIM)
+        st.add(v, r.normal(size=(6, ADIM)).astype(np.float32),
+               np.arange(6, 0, -1, dtype=np.float64),
+               answer_id=np.arange(6))
+        cache.set_centroids(st)
+        for i in range(8):                     # overflows the 2-row spill
+            cache.insert_spill(unit(r, 1)[0],
+                               r.normal(size=ADIM).astype(np.float32),
+                               answer_id=10 + i)
+        cache.last = [cache.lookup(unit(r, 3), th)
+                      for th in (0.3, 0.7, 0.95)]
+    for r1, r2 in zip(plain.last, wrapped.last):
+        for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+            np.testing.assert_array_equal(getattr(r1, f), getattr(r2, f))
+        assert r1.generation == r2.generation
+    assert (plain.hits, plain.misses) == (wrapped.hits, wrapped.misses)
+    np.testing.assert_array_equal(plain.spill.answer_id,
+                                  wrapped.device.spill.answer_id)
+    np.testing.assert_array_equal(plain._spill_last_use,
+                                  wrapped._spill_last_use)
+
+
+# ---------------------------------------------------------------------------
+# property-style: tier membership invariant under random interleavings
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(cache, inserted):
+    ids = live_ids(cache)
+    # every live id is in exactly one tier
+    assert not ids["device"] & ids["host"]
+    assert not ids["device"] & ids["disk"]
+    assert not ids["host"] & ids["disk"]
+    # and in particular never in both the device mirror and the disk tier
+    live = ids["device"] | ids["host"] | ids["disk"]
+    assert live <= inserted
+    # conservation: every identity ever admitted is live somewhere or was
+    # counted out through the drop counter
+    assert len(inserted) == len(live) + cache.drops
+    # per-tier row books stay consistent
+    if cache.host is not None:
+        assert len(cache.host.last_use) == len(cache.host.store)
+    if cache.disk is not None:
+        assert cache.disk.live_count == int(np.sum(cache.disk.live))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tier_invariant_random_interleaving(tmp_path, seed):
+    rng = np.random.default_rng(seed)
+    cache = mk_tiered(tmp_path / str(seed), capacity=6,
+                      host=8, disk=24, flush_rows=7, sweep_every=16,
+                      policy=TierPolicy(base_ttl=24.0))
+    vecs = fill_centroids(cache, rng, 3)
+    inserted = set(range(3))
+    history = [(vecs[i], 0 + i) for i in range(3)]
+    next_id = 3
+    for step in range(300):
+        op = rng.integers(0, 10)
+        if op < 4:                         # insert a fresh identity
+            v = unit(rng, 1)[0]
+            cache.insert_spill(v, rng.normal(size=ADIM).astype(np.float32),
+                               answer_id=next_id)
+            history.append((v, next_id))
+            inserted.add(next_id)
+            next_id += 1
+        elif op < 8 and history:           # revisit an old query
+            v, _ = history[int(rng.integers(len(history)))]
+            cache.lookup(v[None, :], 0.95)
+        elif op == 8:                      # async promotion work
+            cache.promote_tick(budget=int(rng.integers(1, 4)))
+        else:                              # cold probe (miss path)
+            cache.lookup(unit(rng, 2), 0.999)
+        if step % 20 == 0:
+            check_invariants(cache, inserted)
+    cache.promote_drain()
+    check_invariants(cache, inserted)
+
+
+@pytest.mark.parametrize("refresh_async", [False, True])
+def test_tier_invariant_under_siso_refreshes(tmp_path, refresh_async):
+    """End-to-end interleaving including Algorithm-1 refreshes: clustering
+    may merge identities away, so only disjointness (one tier per live id)
+    is asserted — conservation is a TieredCache-level property."""
+    from repro.core.siso import SISO, SISOConfig
+    rng = np.random.default_rng(5)
+    cfg = SISOConfig(dim=DIM, answer_dim=ADIM, capacity=24, theta_r=0.9,
+                     dynamic_threshold=False, refresh_async=refresh_async,
+                     tiered=TieredCacheConfig(
+                         host_capacity=32, disk_capacity=128,
+                         disk_dir=str(tmp_path / "cold"), device_reserve=6,
+                         promote_budget=4))
+    s = SISO(cfg)
+    vb = unit(rng, 32)
+    s.bootstrap(vb, rng.normal(size=(32, ADIM)).astype(np.float32),
+                answer_ids=np.arange(32))
+    history = list(vb)
+    for i in range(150):
+        op = rng.integers(0, 3)
+        if op == 0:
+            v = unit(rng, 1)
+            s.handle_batch(v)
+            s.record_llm_answer(v[0],
+                                rng.normal(size=ADIM).astype(np.float32),
+                                answer_id=1000 + i)
+            history.append(v[0])
+        else:
+            v = history[int(rng.integers(len(history)))]
+            s.handle_batch(v[None, :])
+        if refresh_async:
+            s.refresh_tick()
+        elif s.needs_refresh():
+            s.refresh()
+        if i % 25 == 0:
+            ids = live_ids(s.cache)
+            assert not ids["device"] & ids["host"]
+            assert not ids["device"] & ids["disk"]
+            assert not ids["host"] & ids["disk"]
+    s.refresh_drain()
+    ids = live_ids(s.cache)
+    assert not ids["device"] & ids["host"]
+    assert not ids["device"] & ids["disk"]
+    assert not ids["host"] & ids["disk"]
+    stats = s.cache.tier_stats()
+    assert stats["host_rows"] <= cfg.tiered.host_capacity
+    assert stats["disk_rows"] <= cfg.tiered.disk_capacity
+
+
+# ---------------------------------------------------------------------------
+# hnsw + shard guard (construction-order regression)
+# ---------------------------------------------------------------------------
+
+
+def _shard_cfg(n=2):
+    from repro.distributed.cache_plane import ShardedCacheConfig
+    return ShardedCacheConfig(n_shards=n)
+
+
+def test_hnsw_shard_rejected_at_construction():
+    with pytest.raises(ValueError, match="hnsw"):
+        SemanticCache(DIM, ADIM, 32, backend="hnsw", shard=_shard_cfg())
+
+
+def test_hnsw_shard_rejected_at_serving_time(rng):
+    """The original guard only covered one construction path: a cache
+    whose backend is mutated to "hnsw" after a sharded construction used
+    to silently serve from the host graph, ignoring the device plane."""
+    cache = SemanticCache(DIM, ADIM, 32, backend="dense", shard=_shard_cfg())
+    v = unit(rng, 4)
+    st = CentroidStore(DIM, ADIM)
+    st.add(v, np.zeros((4, ADIM), np.float32), np.ones(4))
+    cache.set_centroids(st)
+    cache.backend = "hnsw"          # post-construction mutation
+    with pytest.raises(ValueError, match="hnsw"):
+        cache.lookup(v[:1], 0.9)

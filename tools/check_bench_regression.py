@@ -71,6 +71,18 @@ METRICS = [
     ("BENCH_restart.json", "crash.recovered",
      "true", None, None,
      "hard-crash (SIGKILL) recovery restored a serving snapshot"),
+    ("BENCH_tiered.json", "hit_ratio_lift_10x",
+     "higher", "abs", 0.05,
+     "3-tier hit-ratio lift over device-only at 10x capacity pressure"),
+    ("BENCH_tiered.json", "lift_positive",
+     "true", None, None,
+     "3-tier hit ratio strictly above device-only at equal device memory"),
+    ("BENCH_tiered.json", "promotion_p99_ms",
+     "lower", "factor", 5.0,
+     "warm/cold -> device promotion apply p99 (generous: runner variance)"),
+    ("BENCH_tiered.json", "p99_within_2x",
+     "true", None, None,
+     "3-tier lookup p99 within 2x of the single-tier lookup p99"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
