@@ -1,0 +1,250 @@
+"""Multi-tenant isolation drill: fair-share tenancy vs the unweighted
+shared pool (EXPERIMENTS.md §Tenancy, DESIGN.md §14).
+
+Two namespaces share one cache. A *steady* tenant keeps re-asking
+paraphrases of a small personal topic set — the textbook cacheable
+workload. A *flooding* tenant churns through never-repeating topics at
+8:1 volume, inserting a fresh entry on every miss. Under plain LRU the
+flood's inserts wash the steady tenant's rows out of the spill region
+between its revisits, so the steady tenant — whose own traffic never
+changed — loses its hit ratio to a neighbor. With tenancy enabled the
+fair-share water-filling evictor charges evictions to the largest
+namespace (the flood) and personal answers land in the tenant's private
+overlay, so the steady tenant's working set survives.
+
+Measured, on the SAME request stream (fixed theta_R, refresh off):
+
+- steady tenant hit ratio alone (phase A) vs under flood (phase B),
+  for the weighted (tenancy on) and unweighted (plain shared pool)
+  arms; the headline is the relative degradation of each
+- no-tenant bit-identity: a tenancy-*configured* SISO serving a stream
+  with no tenant ids must match a tenancy=None SISO element-wise
+  (hit/sim/region) — the single-namespace path is the same code
+- save/restore lockstep: snapshotting the weighted arm mid-flood,
+  restoring into a fresh SISO, and replaying the tail must reproduce
+  the uninterrupted run's hits element-wise (tenancy state round-trips)
+
+Writes results/BENCH_tenancy.json. Full mode asserts the acceptance
+bars (weighted degradation < 10% relative, unweighted > 40%); --smoke
+runs tiny sizes without assertions (the CI gate compares the JSON
+against benchmarks/baselines/BENCH_tenancy.json via
+tools/check_bench_regression.py).
+
+  PYTHONPATH=src python -m benchmarks.bench_tenancy [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+DIM = 32
+ADIM = 32
+THETA_R = 0.92
+NOISE = 0.02            # paraphrase jitter: revisit sim ~0.987 > theta_R
+FLOOD, STEADY = 0, 1    # tenant ids
+FLOOD_PER_STEADY = 8    # phase-B interleave ratio
+
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def build_stream(rng, steady_topics: int, n_a: int, n_b: int):
+    """Deterministic request schedule: (tenant, vector, answer, rid) per
+    request. Phase A is the steady tenant alone cycling its topic set;
+    phase B interleaves FLOOD_PER_STEADY flood requests (each a fresh
+    never-repeating topic) per steady ask."""
+    topics = norm(rng.normal(size=(steady_topics, DIM)).astype(np.float32))
+
+    def steady_ask(k):
+        t = topics[k % steady_topics]
+        return norm(t + NOISE * rng.normal(size=DIM).astype(np.float32))
+
+    stream = []
+    k = 0
+    for _ in range(n_a):
+        stream.append((STEADY, steady_ask(k)))
+        k += 1
+    for i in range(n_b):
+        if i % (FLOOD_PER_STEADY + 1) == FLOOD_PER_STEADY:
+            stream.append((STEADY, steady_ask(k)))
+            k += 1
+        else:
+            stream.append((FLOOD, norm(rng.normal(size=DIM)
+                                       .astype(np.float32))))
+    tenants = np.asarray([t for t, _ in stream], np.int64)
+    vectors = np.stack([v.astype(np.float32) for _, v in stream])
+    answers = rng.normal(size=(len(stream), ADIM)).astype(np.float32)
+    return tenants, vectors, answers
+
+
+def make_siso(capacity: int, tenancy):
+    from repro.core.siso import SISO, SISOConfig
+    cfg = SISOConfig(dim=DIM, answer_dim=ADIM, capacity=capacity,
+                     theta_r=THETA_R, dynamic_threshold=False,
+                     refresh_async=False, tenancy=tenancy)
+    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+
+
+def serve(siso, tenants, vectors, answers, lo=0, hi=None,
+          with_tenants=True, hits_out=None):
+    """Drive stream[lo:hi]; marks per-request hits into hits_out (or a
+    fresh array). Misses record their answer back under the request's
+    namespace — exactly the gateway completion path."""
+    hi = len(tenants) if hi is None else hi
+    hits = np.zeros(len(tenants), bool) if hits_out is None else hits_out
+    for i in range(lo, hi):
+        v = vectors[i]
+        if with_tenants:
+            res = siso.handle_batch(v[None, :], now=float(i),
+                                    tenant_ids=tenants[i:i + 1])
+        else:
+            res = siso.handle_batch(v[None, :], now=float(i))
+        hits[i] = bool(res.hit[0])
+        if not hits[i]:
+            if with_tenants:
+                siso.record_llm_answer(v, answers[i], answer_id=i,
+                                       tenant=int(tenants[i]))
+            else:
+                siso.record_llm_answer(v, answers[i], answer_id=i)
+    return hits
+
+
+def _copy_state(obj):
+    """Deep-copy a state_dict: the live SISO keeps serving after the
+    snapshot, and state arrays may alias live storage."""
+    if isinstance(obj, dict):
+        return {k: _copy_state(v) for k, v in obj.items()}
+    if isinstance(obj, np.ndarray):
+        return obj.copy()
+    return obj
+
+
+def steady_ratios(tenants, hits, n_a, warm):
+    """(phase-A, phase-B) steady-tenant hit ratios; phase A skips the
+    first ``warm`` asks (cold first pass over the topic set)."""
+    st = tenants == STEADY
+    a = hits[:n_a][st[:n_a]][warm:]
+    b = hits[n_a:][st[n_a:]]
+    return float(a.mean()), float(b.mean())
+
+
+def run(capacity: int, steady_topics: int, n_a: int, n_b: int) -> dict:
+    from repro.core.tenancy import TenancyConfig
+    rng = np.random.default_rng(0)
+    tenants, vectors, answers = build_stream(rng, steady_topics, n_a, n_b)
+    n = len(tenants)
+    mid = n_a + (n - n_a) // 2       # drill snapshot point: mid-flood
+
+    # --- weighted arm (tenancy on) with a mid-flood snapshot ------------
+    s_w = make_siso(capacity, TenancyConfig())
+    hits_w = serve(s_w, tenants, vectors, answers, hi=mid)
+    snap = _copy_state(s_w.state_dict())
+    serve(s_w, tenants, vectors, answers, lo=mid, hits_out=hits_w)
+    ha_w, hb_w = steady_ratios(tenants, hits_w, n_a, steady_topics)
+
+    # --- save -> restore -> replay lockstep -----------------------------
+    s_r = make_siso(capacity, TenancyConfig())
+    s_r.load_state(snap)
+    s_r.warm_start()
+    hits_r = serve(s_r, tenants, vectors, answers, lo=mid)
+    drill_identical = bool(np.array_equal(hits_r[mid:], hits_w[mid:]))
+
+    # --- unweighted arm (plain shared pool, same stream) ----------------
+    s_u = make_siso(capacity, None)
+    hits_u = serve(s_u, tenants, vectors, answers, with_tenants=False)
+    ha_u, hb_u = steady_ratios(tenants, hits_u, n_a, steady_topics)
+
+    # --- no-tenant bit-identity -----------------------------------------
+    # a tenancy-*configured* SISO serving tenant-free traffic (no
+    # tenant_ids, no tenant kwarg on record) must be element-wise
+    # identical to a tenancy=None SISO — fair-share eviction with every
+    # row in the anonymous namespace degrades to the legacy order
+    s_u2 = make_siso(capacity, None)
+    s_n2 = make_siso(capacity, TenancyConfig())
+    identical = True
+    for i in range(n):
+        a = s_u2.handle_batch(vectors[i][None, :], now=float(i))
+        b = s_n2.handle_batch(vectors[i][None, :], now=float(i))
+        if (bool(a.hit[0]) != bool(b.hit[0])
+                or int(a.region[0]) != int(b.region[0])
+                or float(a.sim[0]) != float(b.sim[0])):
+            identical = False
+            break
+        if not a.hit[0]:
+            s_u2.record_llm_answer(vectors[i], answers[i], answer_id=i)
+            s_n2.record_llm_answer(vectors[i], answers[i], answer_id=i)
+
+    rel_w = max(0.0, ha_w - hb_w) / max(ha_w, 1e-9)
+    rel_u = max(0.0, ha_u - hb_u) / max(ha_u, 1e-9)
+    ts = s_w.tenant_stats()
+    return {
+        "capacity": capacity,
+        "steady_topics": steady_topics,
+        "flood_per_steady": FLOOD_PER_STEADY,
+        "requests": n,
+        "weighted": {"hit_a": ha_w, "hit_b": hb_w,
+                     "tenant_stats": {str(k): {kk: vv for kk, vv in
+                                               v.items()}
+                                      for k, v in ts.items()}},
+        "unweighted": {"hit_a": ha_u, "hit_b": hb_u},
+        "weighted_rel_degradation": rel_w,
+        "unweighted_rel_degradation": rel_u,
+        "isolation_holds": bool(rel_w < 0.10 and rel_u > 0.40),
+        "no_tenant_identical": bool(identical),
+        "drill": {"identical": drill_identical,
+                  "steps_replayed": n - mid},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, no acceptance assertions")
+    # parse_known_args: benchmarks.run invokes main() with its own argv
+    args, _ = ap.parse_known_args(argv)
+    if args.smoke:
+        spec = dict(capacity=64, steady_topics=16, n_a=96, n_b=432)
+    else:
+        spec = dict(capacity=96, steady_topics=24, n_a=240, n_b=1350)
+
+    print(f"== tenancy isolation drill ({spec['steady_topics']} steady "
+          f"topics vs {FLOOD_PER_STEADY}:1 flood, "
+          f"{spec['capacity']} rows) ==")
+    t0 = time.perf_counter()
+    payload = run(**spec)
+    payload["wall_s"] = time.perf_counter() - t0
+    payload["smoke"] = bool(args.smoke)
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "BENCH_tenancy.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    print(f"  steady hit ratio alone->flooded: weighted "
+          f"{payload['weighted']['hit_a']:.3f}->"
+          f"{payload['weighted']['hit_b']:.3f} "
+          f"({payload['weighted_rel_degradation']:.1%} rel), unweighted "
+          f"{payload['unweighted']['hit_a']:.3f}->"
+          f"{payload['unweighted']['hit_b']:.3f} "
+          f"({payload['unweighted_rel_degradation']:.1%} rel)")
+    print(f"  no_tenant_identical {payload['no_tenant_identical']}; "
+          f"drill.identical {payload['drill']['identical']}")
+
+    if not args.smoke:
+        assert payload["weighted_rel_degradation"] < 0.10, \
+            "fair-share tenancy let the flood degrade the steady tenant"
+        assert payload["unweighted_rel_degradation"] > 0.40, \
+            "unweighted baseline did not show the isolation failure"
+        assert payload["no_tenant_identical"], \
+            "tenancy-configured SISO diverged on tenant-free traffic"
+        assert payload["drill"]["identical"], \
+            "restored multi-tenant SISO diverged from uninterrupted run"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

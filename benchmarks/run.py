@@ -32,6 +32,7 @@ BENCHES = [
     "bench_shard",          # EXPERIMENTS.md §Shard mesh cache plane
     "bench_restart",        # EXPERIMENTS.md §Restart kill-and-recover drill
     "bench_tiered",         # EXPERIMENTS.md §Tiered hierarchy drill
+    "bench_tenancy",        # EXPERIMENTS.md §Tenancy isolation drill
 ]
 
 

@@ -141,16 +141,22 @@ class RefreshPipeline:
             return
         c_new, stats = self._planner.result()
         self._planner = None
+        # fair-share filter eviction (DESIGN.md §14): resolve each merged
+        # row's namespace through the registry; None = unweighted
+        tenant_of = getattr(self.siso, "tenant_of", None)
+        tenants = tenant_of(c_new.answer_id) if tenant_of is not None \
+            else None
         if getattr(self.siso.cache, "evict_sink", None) is not None:
             # tiered hierarchy (DESIGN.md §13): keep the filter's evicted
             # centroids — the commit demotes them instead of discarding
             c_new, stats.evicted, self._evicted = filter_centroids(
                 c_new, self.siso.centroid_capacity,
-                self.siso.manager.decay, collect_evicted=True)
+                self.siso.manager.decay, collect_evicted=True,
+                tenants=tenants)
         else:
             c_new, stats.evicted = filter_centroids(
                 c_new, self.siso.centroid_capacity,
-                self.siso.manager.decay)
+                self.siso.manager.decay, tenants=tenants)
             self._evicted = None
         # final store in the cache's locality-first layout, rebuilt through
         # a fresh add() so ids match the synchronous staging path exactly

@@ -189,6 +189,14 @@ class SemanticCache:
         # instead of being silently discarded. None (the default) keeps
         # every eviction path bit-identical to the single-tier behavior.
         self.evict_sink = None
+        # multi-tenant fair-share eviction (DESIGN.md §14): when both are
+        # set (SISO wires them from its TenancyConfig), spill victim
+        # selection charges each row to its owning namespace — resolved
+        # from answer_id through ``tenant_of`` — and evicts from the
+        # most-over-budget namespace first. Defaults keep the unweighted
+        # LRU path bit-identical.
+        self.fair_share_eviction = False
+        self.tenant_of = None     # answer_ids -> tenants, or None
 
     def _reject_hnsw_shard(self) -> None:
         """The hnsw backend serves from a host graph and would silently
@@ -221,16 +229,24 @@ class SemanticCache:
         commit_shadow so both refresh paths trim identically)."""
         if len(self.spill) > self.spill_capacity:  # spill shrank
             drop = len(self.spill) - self.spill_capacity
-            order = np.argsort(self._spill_last_use)
+            if self.fair_share_eviction and self.tenant_of is not None:
+                # tenant-weighted trim (DESIGN.md §14): over-budget
+                # namespaces give up rows first, LRU within each
+                from repro.core.tenancy import fair_share_take
+                victims = fair_share_take(
+                    self.tenant_of(self.spill.answer_id),
+                    self._spill_last_use, drop)
+            else:
+                victims = np.argsort(self._spill_last_use)[:drop]
             dead = None
             if self.evict_sink is not None:
-                rows = np.sort(order[:drop])
+                rows = np.sort(victims)
                 dead = (self.spill.vectors[rows].copy(),
                         self.spill.answers[rows].copy(),
                         self.spill.answer_id[rows].copy(),
                         self.spill.cluster_size[rows].copy(),
                         self.spill.access_count[rows].copy())
-            keep = np.sort(order[drop:])
+            keep = np.setdiff1d(np.arange(len(self.spill)), victims)
             self.spill.take(keep)
             self._spill_last_use = self._spill_last_use[keep]
             if dead is not None:    # sink fires after the rows left
@@ -587,7 +603,19 @@ class SemanticCache:
         nc = len(self.centroids)
         self._spill_clock += 1
         if len(self.spill) >= self.spill_capacity:
-            victim = int(np.argmin(self._spill_last_use))
+            if self.fair_share_eviction and self.tenant_of is not None:
+                # fair-share victim (DESIGN.md §14): charge the incoming
+                # row to its namespace, then evict from the largest-
+                # occupancy namespace (its own LRU row) — a flooding
+                # tenant consumes its own rows first
+                from repro.core.tenancy import fair_share_take
+                incoming = int(self.tenant_of(
+                    np.asarray([answer_id], np.int64))[0])
+                victim = int(fair_share_take(
+                    self.tenant_of(self.spill.answer_id),
+                    self._spill_last_use, 1, incoming=incoming)[0])
+            else:
+                victim = int(np.argmin(self._spill_last_use))
             # copies: set_row overwrites these slots in place below; the
             # sink fires only AFTER the row left the device so a tiered
             # sink sees a consistent "not in device anymore" view

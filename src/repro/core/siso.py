@@ -19,6 +19,8 @@ from repro.core.clustering import community_detection
 from repro.core.refresh import RefreshPipeline
 from repro.core.semantic_cache import LookupResult, SemanticCache
 from repro.core.store import CentroidStore
+from repro.core.tenancy import (REGION_OVERLAY, TenancyConfig,
+                                TenantRegistry, TenantState)
 from repro.core.threshold import DynamicThreshold, T2HTable
 from repro.core.tiered import TieredCache, TieredCacheConfig
 from repro.distributed.cache_plane import ShardedCacheConfig
@@ -56,6 +58,11 @@ class SISOConfig:
                                      # device → host → disk hierarchy
                                      # (DESIGN.md §13); None keeps the
                                      # single-tier path bit-identical
+    tenancy: Optional[TenancyConfig] = None
+                                     # multi-tenant namespaces: per-tenant
+                                     # overlays, theta, fair-share eviction
+                                     # (DESIGN.md §14); None keeps the
+                                     # single-namespace path bit-identical
 
 
 class SISO:
@@ -75,11 +82,29 @@ class SISO:
             enabled=cfg.dynamic_threshold)
         self.threshold.theta = cfg.theta_r
         self._user_last: dict = {}      # user -> (vec, t)
+        self._last_user_sweep = -np.inf  # last _user_last expiry sweep
         self._log_vecs: list = []       # accumulating query log (online)
         self._log_answers: list = []
         self._initial_log_size = 0
         self.pipeline = RefreshPipeline(self)   # DESIGN.md §10
         self._sync_refreshes = 0                # blocking-path cycles
+        # multi-tenant namespaces (DESIGN.md §14): per-tenant overlays +
+        # a registry attributing shared-store rows to their namespace.
+        # tenant_of is the answer_ids -> tenants resolver the eviction
+        # paths (spill, refresh filter, tier demotion) consult; None
+        # keeps every one of them bit-identical to the unweighted path.
+        self._tenants: dict = {}        # tenant id -> TenantState
+        self.registry = (TenantRegistry(cfg.tenancy.registry_cap)
+                         if cfg.tenancy is not None else None)
+        self.tenant_of = None
+        if cfg.tenancy is not None and cfg.tenancy.fair_share_eviction:
+            self.tenant_of = self.tenants_of
+            dev = self.cache.device if cfg.tiered is not None else self.cache
+            dev.fair_share_eviction = True
+            dev.tenant_of = self.tenant_of
+            if cfg.tiered is not None:
+                self.cache.fair_share_eviction = True
+                self.cache.tenant_of = self.tenant_of
 
     # ----------------------------------------------------------------- online
 
@@ -97,12 +122,40 @@ class SISO:
         return max(1, self.cfg.capacity - reserve)
 
     def handle_batch(self, vectors: np.ndarray, now: float = 0.0,
-                     user_ids: Optional[np.ndarray] = None) -> LookupResult:
+                     user_ids: Optional[np.ndarray] = None,
+                     tenant_ids: Optional[np.ndarray] = None
+                     ) -> LookupResult:
         """Lookup a batch of query embeddings. Repeated queries from the
         same user are forced to miss (routed to the LLM). Negative user
-        ids mark anonymous requests: no repeat tracking, no state kept."""
+        ids mark anonymous requests: no repeat tracking, no state kept.
+        ``tenant_ids`` (with a TenancyConfig) routes each row through its
+        namespace: overlay-then-global lookup at the tenant's own theta
+        (DESIGN.md §14); -1 marks anonymous rows, which serve from the
+        shared pool exactly like the tenant-free path."""
         vectors = np.atleast_2d(vectors)
         self.threshold.observe_arrivals(now, len(vectors))
+        self._sweep_user_last(now)
+        if tenant_ids is None or self.cfg.tenancy is None:
+            return self._serve_batch(vectors, now, user_ids)
+        return self._serve_batch_tenant(vectors, now, user_ids,
+                                        np.asarray(tenant_ids, np.int64))
+
+    def _sweep_user_last(self, now: float) -> None:
+        """Expire repeat-tracking entries older than repeat_window, at
+        most once per window. A stale entry can never trigger an escape
+        (the escape requires ``now - t <= repeat_window``), so the sweep
+        is semantics-preserving — but without it ``_user_last`` grows one
+        entry per user forever."""
+        if now - self._last_user_sweep < self.cfg.repeat_window:
+            return
+        horizon = now - self.cfg.repeat_window
+        self._user_last = {u: vt for u, vt in self._user_last.items()
+                           if vt[1] >= horizon}
+        self._last_user_sweep = now
+
+    def _serve_batch(self, vectors: np.ndarray, now: float,
+                     user_ids: Optional[np.ndarray]) -> LookupResult:
+        """The single-namespace serving path (unchanged semantics)."""
         # pre-lookup spill recency snapshot: a repeat escape must be able
         # to undo the phantom hit's LRU bump (else escaped repeats keep
         # spill rows artificially warm and pollute victim selection)
@@ -175,16 +228,203 @@ class SISO:
             elif prev_lru is not None and row < len(prev_lru):
                 self.cache._spill_last_use[row] = prev_lru[row]
 
+    # ---------------------------------------------------------- multi-tenant
+
+    def tenants_of(self, answer_ids: np.ndarray) -> np.ndarray:
+        """Row ownership for the fair-share eviction paths: answer_id ->
+        namespace through the registry (-1 = shared pool)."""
+        if self.registry is None:
+            return np.full(len(np.atleast_1d(answer_ids)), -1, np.int64)
+        return self.registry.tenants_of(answer_ids)
+
+    def _tenant_state(self, tid: int) -> Optional[TenantState]:
+        ts = self._tenants.get(tid)
+        if ts is None:
+            if len(self._tenants) >= self.cfg.tenancy.max_tenants:
+                return None     # cap: overflow tenants share the pool
+            ts = TenantState(self.cfg.dim, self.cfg.answer_dim,
+                             self.cfg.tenancy)
+            self._tenants[tid] = ts
+        return ts
+
+    def tenant_theta(self, tid: int) -> float:
+        """The namespace's serving threshold (the global theta_r until
+        per-tenant calibration kicks in, or when tenancy/DTA is off)."""
+        if (self.cfg.tenancy is None
+                or not self.cfg.tenancy.per_tenant_theta
+                or not self.cfg.dynamic_threshold):
+            return self.theta_r
+        return self.threshold.tenant_theta(int(tid))
+
+    def _serve_batch_tenant(self, vectors: np.ndarray, now: float,
+                            user_ids: Optional[np.ndarray],
+                            tenant_ids: np.ndarray) -> LookupResult:
+        """Namespace-aware serving (DESIGN.md §14): overlay-then-global
+        lookup, per-tenant theta, repeat escapes, per-tenant counters —
+        still one device round trip for the whole batch. The global
+        lookup runs at the weakest theta present; rows whose best sim
+        misses their own namespace's theta are escaped back to the
+        engine with the exact repeat-escape undo machinery."""
+        tcfg = self.cfg.tenancy
+        n = len(vectors)
+        per_theta = tcfg.per_tenant_theta and self.cfg.dynamic_threshold
+        if per_theta:
+            self.threshold.observe_tenant_arrivals(now, tenant_ids)
+        thetas = np.full(n, self.theta_r, np.float64)
+        if per_theta:
+            for b in range(n):
+                if tenant_ids[b] >= 0:
+                    thetas[b] = self.threshold.tenant_theta(
+                        int(tenant_ids[b]))
+        # ---- overlay pass: each tenant's personal view first
+        ov: dict = {}             # batch pos -> (TenantState, row, sim)
+        for b in range(n):
+            tid = int(tenant_ids[b])
+            if tid < 0:
+                continue
+            ts = self._tenants.get(tid)
+            if ts is None or not len(ts.overlay):
+                continue
+            sim, row = ts.overlay.search(vectors[b])
+            if sim >= thetas[b]:
+                ov[b] = (ts, row, sim)
+        pending = np.asarray([b for b in range(n) if b not in ov],
+                             np.int64)
+        theta_min = float(thetas[pending].min()) if len(pending) \
+            else self.theta_r
+        prev_lru = (self.cache._spill_last_use.copy()
+                    if len(pending) and len(self.cache.spill) else None)
+        sub = (self.cache.lookup(vectors[pending], theta_min)
+               if len(pending) else None)
+        nc = len(self.cache.centroids)
+        spill_order = (np.where(sub.hit & (sub.region == 1))[0]
+                       if sub is not None else np.zeros(0, np.int64))
+        escaped_spill: list[tuple[int, int]] = []
+        sub_pos = {int(p): j for j, p in enumerate(pending)}
+        # ---- unified per-row pass in batch order, so repeat-tracking
+        # updates and duplicate-user-in-batch semantics match the
+        # single-namespace loop exactly
+        for b in range(n):
+            tid = int(tenant_ids[b])
+            u = int(user_ids[b]) if user_ids is not None else -1
+            repeat = False
+            if u >= 0:
+                prev = self._user_last.get(u)
+                repeat = (prev is not None
+                          and now - prev[1] <= self.cfg.repeat_window
+                          and float(vectors[b] @ prev[0])
+                          >= self.cfg.repeat_sim)
+            if b in ov:
+                ts, row, sim = ov[b]
+                if repeat:
+                    # dissatisfied-user escape straight off the overlay:
+                    # nothing was touched yet — just count an engine miss
+                    self.cache.misses += 1
+                    ts.misses += 1
+                    del ov[b]
+                else:
+                    ts.overlay.touch(row)
+                    self.cache.hits += 1
+                    ts.hits += 1
+                    ts.overlay_hits += 1
+            else:
+                j = sub_pos[b]
+                # float32: the device decided hits at f32 precision, so
+                # the per-row theta filter must compare at f32 too (a
+                # tenant at exactly theta_min must never escape its hits)
+                escape = bool(sub.hit[j]) and (
+                    float(sub.sim[j]) < float(np.float32(thetas[b]))
+                    or repeat)
+                if escape:
+                    if sub.region[j] == 0:
+                        self.cache.centroids.access_count[
+                            int(sub.entry[j])] -= 1.0
+                    elif sub.region[j] == 1:
+                        escaped_spill.append((j, int(sub.entry[j]) - nc))
+                    elif sub.region[j] >= 2:
+                        self.cache.undo_tier_hit(int(sub.entry[j]),
+                                                 int(sub.region[j]))
+                    self.cache.hits -= 1
+                    self.cache.misses += 1
+                    sub.hit[j] = False
+                    sub.region[j] = -1
+                    sub.entry[j] = -1
+                if tid >= 0:
+                    ts = self._tenant_state(tid)
+                    if ts is not None:
+                        if sub.hit[j]:
+                            ts.hits += 1
+                        else:
+                            ts.misses += 1
+            if u >= 0:
+                self._user_last[u] = (vectors[b], now)
+        if escaped_spill:
+            self._restore_spill_recency(sub, prev_lru, spill_order,
+                                        escaped_spill, nc)
+        return self._merge_tenant_result(vectors, ov, pending, sub)
+
+    def _merge_tenant_result(self, vectors: np.ndarray, ov: dict,
+                             pending: np.ndarray,
+                             sub: Optional[LookupResult]) -> LookupResult:
+        """Stitch overlay hits (region 4) and the global sub-lookup back
+        into one batch-ordered LookupResult."""
+        n = len(vectors)
+        res = LookupResult(
+            np.zeros(n, bool), np.full(n, -1.0, np.float32),
+            np.zeros((n, self.cfg.answer_dim), np.float32),
+            np.full(n, -1, np.int64), np.full(n, -1, np.int64),
+            np.full(n, -1, np.int8),
+            generation=(sub.generation if sub is not None
+                        else self.cache.generation))
+        if sub is not None:
+            res.hit[pending] = sub.hit
+            res.sim[pending] = sub.sim
+            res.answer[pending] = sub.answer
+            res.answer_id[pending] = sub.answer_id
+            res.entry[pending] = sub.entry
+            res.region[pending] = sub.region
+        for b, (ts, row, sim) in ov.items():
+            res.hit[b] = True
+            res.sim[b] = np.float32(sim)
+            res.answer[b] = ts.overlay.answers[row]
+            res.answer_id[b] = int(ts.overlay.answer_id[row])
+            res.entry[b] = row
+            res.region[b] = REGION_OVERLAY
+        return res
+
     def observe_completion(self, wait: float,
-                           service: Optional[float] = None) -> None:
+                           service: Optional[float] = None,
+                           tenant: Optional[int] = None) -> None:
         """An engine (or inline-hit) completion's realized wait/service,
-        fed into the dynamic-threshold control loop (DESIGN.md §7.1)."""
-        self.threshold.observe_completion(wait, service)
+        fed into the dynamic-threshold control loop (DESIGN.md §7.1).
+        ``tenant`` additionally drives the namespace's own feedback."""
+        self.threshold.observe_completion(wait, service, tenant=tenant)
 
     def record_llm_answer(self, vector: np.ndarray, answer: np.ndarray,
-                          answer_id: int = -1) -> None:
+                          answer_id: int = -1,
+                          tenant: Optional[int] = None) -> None:
         """A miss came back from the LLM: log it (offline path input) and
-        LRU-insert into spare capacity."""
+        LRU-insert into spare capacity. With a tenant, the answer is
+        first attributed to its namespace; *personal* answers (similar to
+        the tenant's own recent misses) go to the tenant overlay only —
+        never the shared log/spill, so they are never clustered into
+        global centroids (DESIGN.md §14)."""
+        if tenant is not None and tenant >= 0 \
+                and self.cfg.tenancy is not None:
+            # attribution before the insert: the spill's fair-share
+            # victim choice must already see the inserter's namespace
+            self.registry.note(int(answer_id), int(tenant))
+            ts = self._tenant_state(int(tenant))
+            if ts is not None:
+                # classify against the window BEFORE this query joins it
+                # (else every answer self-matches as personal)
+                personal = ts.is_personal(vector)
+                ts.push_recent(vector)
+                if personal:
+                    ts.overlay.add(np.asarray(vector, np.float32),
+                                   np.asarray(answer, np.float32),
+                                   int(answer_id))
+                    return
         self._log_vecs.append(np.asarray(vector, np.float32))
         self._log_answers.append((np.asarray(answer, np.float32), answer_id))
         self.cache.insert_spill(vector, answer, answer_id)
@@ -335,11 +575,12 @@ class SISO:
         if sink is not None:    # tiered: demote filter evictions (§13)
             c_new, stats, evicted = self.manager.plan(
                 self.cache.centroids, repo, self.centroid_capacity,
-                collect_evicted=True)
+                collect_evicted=True, tenant_of=self.tenant_of)
         else:
             evicted = None
             c_new, stats = self.manager.plan(self.cache.centroids, repo,
-                                             self.centroid_capacity)
+                                             self.centroid_capacity,
+                                             tenant_of=self.tenant_of)
         first = True
         for chunk in self.manager.update_chunks(c_new):  # progressive update
             self.cache.apply_chunk(chunk, first)
@@ -392,7 +633,17 @@ class SISO:
                                                  np.float32)),
             "user_times": np.asarray(
                 [self._user_last[u][1] for u in users], np.float64),
+            "last_user_sweep": np.asarray(self._last_user_sweep),
         }
+        if self.cfg.tenancy is not None:
+            # the tenancy plane is small (bounded overlays + registry) so
+            # it rides in full snapshots AND deltas — a warm restart from
+            # either reproduces overlay serving exactly (DESIGN.md §14)
+            state["tenancy"] = {
+                "registry": self.registry.state_dict(),
+                "tenants": {str(t): ts.state_dict()
+                            for t, ts in self._tenants.items()},
+            }
         return state
 
     @property
@@ -425,6 +676,19 @@ class SISO:
             for u, v, t in zip(np.asarray(state["user_ids"], np.int64),
                                np.asarray(state["user_vecs"], np.float32),
                                np.asarray(state["user_times"], np.float64))}
+        # .get(): checkpoints predating the sweep/tenancy restore clean
+        self._last_user_sweep = float(state.get("last_user_sweep",
+                                                -np.inf))
+        if self.cfg.tenancy is not None:
+            ten = state.get("tenancy")
+            self._tenants = {}
+            if ten is not None:
+                self.registry.load_state(ten["registry"])
+                for key, tstate in ten["tenants"].items():
+                    ts = TenantState(self.cfg.dim, self.cfg.answer_dim,
+                                     self.cfg.tenancy)
+                    ts.load_state(tstate)
+                    self._tenants[int(key)] = ts
 
     def warm_start(self) -> None:
         """Re-materialize the restored serving state (DESIGN.md §12):
@@ -463,4 +727,38 @@ class SISO:
         }
         if hasattr(self.cache, "tier_stats"):   # hierarchy (DESIGN.md §13)
             out["tiers"] = self.cache.tier_stats()
+        if self.cfg.tenancy is not None:        # namespaces (DESIGN.md §14)
+            out["tenants"] = self.tenant_stats()
+        return out
+
+    def tenant_stats(self) -> dict:
+        """Per-namespace breakdown (DESIGN.md §14): serving counters,
+        overlay footprint, and each tenant's share of the shared stores
+        (device + warm + cold rows, attributed through the registry) —
+        the observable form of the fair-share isolation claim."""
+        if hasattr(self.cache, "tier_membership"):
+            tm = self.cache.tier_membership()
+            all_ids = np.concatenate([tm["device"], tm["host"],
+                                      tm["disk"]])
+        else:
+            all_ids = np.concatenate([self.cache.centroids.answer_id,
+                                      self.cache.spill.answer_id])
+        occ = (self.registry.occupancy(all_ids)
+               if self.registry is not None else {})
+        total = max(1, len(all_ids))
+        out = {}
+        for tid in sorted(self._tenants):
+            ts = self._tenants[tid]
+            served = ts.hits + ts.misses
+            rows = int(occ.get(tid, 0))
+            out[int(tid)] = {
+                "hits": ts.hits,
+                "misses": ts.misses,
+                "hit_ratio": ts.hits / served if served else 0.0,
+                "overlay_hits": ts.overlay_hits,
+                "overlay_rows": len(ts.overlay),
+                "shared_rows": rows,
+                "occupancy_share": rows / total,
+                "theta": self.tenant_theta(tid),
+            }
         return out

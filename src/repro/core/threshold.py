@@ -104,6 +104,12 @@ class DynamicThreshold:
         default_factory=lambda: deque(maxlen=TRACE_WINDOW))  # (t, lam)
     wait_errors: deque = field(
         default_factory=lambda: deque(maxlen=ERR_WINDOW))  # relative err
+    # per-namespace calibration (DESIGN.md §14): each identified tenant
+    # gets its own arrival window, theta operating point, and feedback
+    # bias, while sharing the global T2H table and LLM-latency EMA (one
+    # engine behind the cache — service time is not tenant-specific).
+    # Keyed by tenant id; empty until observe_tenant_arrivals sees one.
+    _tenants: dict = field(default_factory=dict)
 
     # ------------------------------------------------------------ arrivals
 
@@ -124,6 +130,58 @@ class DynamicThreshold:
             self._last_refresh = t
             self.lam_trace.append((t, self.lam))
             self.retune()
+
+    # ------------------------------------------------------- per-namespace
+
+    def _tenant_state(self, tid: int) -> dict:
+        ts = self._tenants.get(tid)
+        if ts is None:
+            ts = {"lam": 0.0, "theta": None, "bias": 0, "arrivals": [],
+                  "last_refresh": None, "n_feedback": 0}
+            self._tenants[tid] = ts
+        return ts
+
+    def observe_tenant_arrivals(self, t: float,
+                                tenant_ids: np.ndarray) -> None:
+        """Per-namespace lambda monitoring: each identified tenant's
+        arrivals feed its own window; a rollover retunes that tenant's
+        theta under the *fair-share* M/D/1 — the tenant's own rate scaled
+        by the number of active namespaces, modeling its slice of the
+        shared engine (DESIGN.md §14). Anonymous rows (tenant < 0) are
+        covered by the global window alone."""
+        tids = np.asarray(tenant_ids, np.int64)
+        for tid in np.unique(tids[tids >= 0]):
+            ts = self._tenant_state(int(tid))
+            n = int((tids == tid).sum())
+            ts["arrivals"].extend([t] * n)
+            if ts["last_refresh"] is None:
+                ts["last_refresh"] = t
+                continue
+            if t - ts["last_refresh"] >= self.lambda_window:
+                horizon = t - self.lambda_window
+                ts["arrivals"] = [a for a in ts["arrivals"]
+                                  if a >= horizon]
+                ts["lam"] = len(ts["arrivals"]) / self.lambda_window
+                ts["last_refresh"] = t
+                self._retune_tenant(ts)
+
+    def _retune_tenant(self, ts: dict) -> None:
+        if not self.enabled:
+            return
+        lam_eff = ts["lam"] * max(1, len(self._tenants))
+        ts["theta"] = self._pick_theta(lam_eff, ts["bias"])
+
+    def tenant_theta(self, tid: int) -> float:
+        """The namespace's operating point; the shared global theta until
+        the tenant's first window rollover calibrates one."""
+        ts = self._tenants.get(int(tid))
+        if ts is None or ts["theta"] is None or not self.enabled:
+            return self.theta
+        return float(ts["theta"])
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self._tenants)
 
     # --------------------------------------------------------- calibration
 
@@ -152,6 +210,21 @@ class DynamicThreshold:
         E = self.llm_latency * (1.0 - self.t2h.h(theta))
         return mdo1_wait(self.lam, E)
 
+    def _pick_theta(self, lam: float, bias: int) -> float:
+        """Highest theta with W(theta) <= S at arrival rate ``lam``, then
+        the feedback bias in table steps — the one selection rule shared
+        by the global retune and every per-namespace retune."""
+        chosen = None
+        for i, th in enumerate(self.t2h.thetas):  # descending thetas
+            E = self.llm_latency * (1.0 - self.t2h.h(float(th)))
+            if mdo1_wait(lam, E) <= self.slo_latency:
+                chosen = i
+                break
+        if chosen is None:
+            chosen = len(self.t2h.thetas) - 1
+        chosen = int(np.clip(chosen + bias, 0, len(self.t2h.thetas) - 1))
+        return float(self.t2h.thetas[chosen])
+
     def retune(self) -> float:
         """Pick the highest theta with W(theta) <= S (then apply feedback
         bias). Falls back to the lowest theta when nothing is feasible."""
@@ -159,15 +232,12 @@ class DynamicThreshold:
             # fixed-theta operation (SISO-NoDTA): the configured operating
             # point must never be overwritten by the table
             return self.theta
-        chosen = None
-        for i, th in enumerate(self.t2h.thetas):  # descending thetas
-            if self.predicted_wait(float(th)) <= self.slo_latency:
-                chosen = i
-                break
-        if chosen is None:
-            chosen = len(self.t2h.thetas) - 1
-        chosen = int(np.clip(chosen + self._bias, 0, len(self.t2h.thetas) - 1))
-        self.theta = float(self.t2h.thetas[chosen])
+        self.theta = self._pick_theta(self.lam, self._bias)
+        # a retune fires when the shared model moved (new T2H table,
+        # recalibrated L, global window rollover): refresh every
+        # namespace operating point against the new model too
+        for ts in self._tenants.values():
+            self._retune_tenant(ts)
         return self.theta
 
     # ------------------------------------------------------------ feedback
@@ -201,15 +271,46 @@ class DynamicThreshold:
         self._bias = int(np.clip(self._bias, 0, len(self.t2h.thetas) - 1))
         self.retune()
 
+    def _tenant_feedback(self, tid: int, observed_wait: float) -> None:
+        """Per-namespace ±band correction mirroring :meth:`feedback`, run
+        against the tenant's own fair-share M/D/1 prediction so one
+        tenant's SLO misses bias only its own operating point."""
+        ts = self._tenants.get(int(tid))
+        if ts is None or not self.enabled:
+            return
+        ts["n_feedback"] += 1
+        lam_eff = ts["lam"] * max(1, len(self._tenants))
+        theta = self.theta if ts["theta"] is None else float(ts["theta"])
+        E = self.llm_latency * (1.0 - self.t2h.h(theta))
+        predicted = mdo1_wait(lam_eff, E)
+        if not np.isfinite(predicted):
+            ts["bias"] += 1
+        else:
+            ref = predicted if predicted > 0 else self.slo_latency
+            if ref <= 0:
+                return
+            err = (observed_wait - ref) / ref
+            if err > self.error_band:
+                ts["bias"] += 1
+            elif err < -self.error_band and ts["bias"] > 0:
+                ts["bias"] -= 1
+        ts["bias"] = int(np.clip(ts["bias"], 0, len(self.t2h.thetas) - 1))
+        self._retune_tenant(ts)
+
     def observe_completion(self, wait: float,
-                           service: Optional[float] = None) -> None:
+                           service: Optional[float] = None,
+                           tenant: Optional[int] = None) -> None:
         """One served request: ``wait`` is its realized sojourn (0 for an
         inline cache hit), ``service`` its measured engine time (None for
         hits — nothing to calibrate from). This is the single completion
-        entry point both the simulator and the live scheduler call."""
+        entry point both the simulator and the live scheduler call.
+        ``tenant`` (when identified, >= 0) additionally feeds the
+        namespace's own feedback loop."""
         self.feedback(wait)
         if service is not None:
             self.observe_service(service)
+        if tenant is not None and tenant >= 0:
+            self._tenant_feedback(int(tenant), wait)
 
     # --------------------------------------------------------- persistence
 
@@ -236,7 +337,51 @@ class DynamicThreshold:
             "t2h": {"thetas": np.asarray(self.t2h.thetas, np.float64),
                     "hit_ratios": np.asarray(self.t2h.hit_ratios,
                                              np.float64)},
+            # per-namespace calibration, flattened to parallel arrays
+            # (NaN encodes a not-yet-calibrated theta / open window)
+            "tenants": self._tenants_state(),
         }
+
+    def _tenants_state(self) -> dict:
+        tids = sorted(self._tenants)
+        states = [self._tenants[t] for t in tids]
+        return {
+            "ids": np.asarray(tids, np.int64),
+            "theta": np.asarray(
+                [np.nan if ts["theta"] is None else float(ts["theta"])
+                 for ts in states], np.float64),
+            "lam": np.asarray([ts["lam"] for ts in states], np.float64),
+            "bias": np.asarray([ts["bias"] for ts in states], np.int64),
+            "n_feedback": np.asarray(
+                [ts["n_feedback"] for ts in states], np.int64),
+            "last_refresh": np.asarray(
+                [np.nan if ts["last_refresh"] is None
+                 else float(ts["last_refresh"]) for ts in states],
+                np.float64),
+            "arrivals": np.asarray(
+                [a for ts in states for a in ts["arrivals"]], np.float64),
+            "arrival_counts": np.asarray(
+                [len(ts["arrivals"]) for ts in states], np.int64),
+        }
+
+    def _load_tenants(self, state: dict) -> None:
+        self._tenants = {}
+        ids = np.asarray(state["ids"], np.int64)
+        arrivals = np.asarray(state["arrivals"], np.float64)
+        counts = np.asarray(state["arrival_counts"], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        for i, tid in enumerate(ids):
+            theta = float(np.asarray(state["theta"])[i])
+            last = float(np.asarray(state["last_refresh"])[i])
+            self._tenants[int(tid)] = {
+                "lam": float(np.asarray(state["lam"])[i]),
+                "theta": None if np.isnan(theta) else theta,
+                "bias": int(np.asarray(state["bias"])[i]),
+                "arrivals": [float(a) for a in
+                             arrivals[offsets[i]:offsets[i + 1]]],
+                "last_refresh": None if np.isnan(last) else last,
+                "n_feedback": int(np.asarray(state["n_feedback"])[i]),
+            }
 
     def load_state(self, state: dict) -> None:
         self.theta = float(state["theta"])
@@ -255,6 +400,11 @@ class DynamicThreshold:
         # np.array (copy): never alias a live table from the donor state
         self.t2h = T2HTable(np.array(state["t2h"]["thetas"]),
                             np.array(state["t2h"]["hit_ratios"]))
+        # .get(): checkpoints predating tenancy restore tenant-free
+        self._load_tenants(state.get(
+            "tenants", {"ids": [], "theta": [], "lam": [], "bias": [],
+                        "n_feedback": [], "last_refresh": [],
+                        "arrivals": [], "arrival_counts": []}))
 
     # ----------------------------------------------------------- telemetry
 

@@ -450,6 +450,13 @@ class TieredCache:
         self._promo_set: set = set()
         self.promote_latencies: deque = deque(maxlen=4096)
         self._last_sweep = 0
+        # multi-tenant fair-share eviction (DESIGN.md §14): mirrors the
+        # device tier's knobs — when SISO wires both, lower-tier capacity
+        # victims are charged to their owning namespace too, so a flood
+        # cannot purge a steady tenant's warm/cold entries either.
+        # Defaults keep the unweighted hotness eviction bit-identical.
+        self.fair_share_eviction = False
+        self.tenant_of = None
         if self.host is not None or self.disk is not None:
             # the demotion tap: only installed when a lower tier exists,
             # so a 1-tier config leaves the device path bit-identical
@@ -738,7 +745,12 @@ class TieredCache:
             score = self.policy.hotness(
                 st.cluster_size, st.access_count, self.host.last_use,
                 self.clock, np.full(len(st), 4.0 * self.device.answer_dim))
-            victims = np.sort(np.argsort(score, kind="stable")[:k])
+            if self.fair_share_eviction and self.tenant_of is not None:
+                from repro.core.tenancy import fair_share_take
+                victims = np.sort(fair_share_take(
+                    self.tenant_of(st.answer_id), score, k))
+            else:
+                victims = np.sort(np.argsort(score, kind="stable")[:k])
             entry = self.host.take_rows(victims)
             if self.disk is not None:
                 self.disk.append(*entry, self.clock)
@@ -753,7 +765,12 @@ class TieredCache:
                 self.disk.cluster_size[rows], self.disk.access_count[rows],
                 self.disk.last_use[rows], self.clock,
                 np.full(len(rows), 4.0 * self.device.answer_dim))
-            victims = rows[np.argsort(score, kind="stable")[:k]]
+            if self.fair_share_eviction and self.tenant_of is not None:
+                from repro.core.tenancy import fair_share_take
+                victims = rows[fair_share_take(
+                    self.tenant_of(self.disk.answer_id[rows]), score, k)]
+            else:
+                victims = rows[np.argsort(score, kind="stable")[:k]]
             self.disk.live[victims] = False
             self.drops += k
 

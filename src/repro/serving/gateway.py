@@ -51,6 +51,9 @@ class GatewayRequest:
     model_tokens: np.ndarray
     embed_tokens: Optional[np.ndarray] = None
     user_id: Optional[int] = None
+    # namespace identity (DESIGN.md §14): routes the request through its
+    # tenant's cache view / theta; None = anonymous (shared pool)
+    tenant: Optional[int] = None
     max_new: int = 32
     eos_id: int = -1
     # ground-truth answer embedding to record on engine completion
@@ -128,6 +131,10 @@ class ServingGateway:
         self._eng_waits: deque = deque(maxlen=STATS_WINDOW)
         self._slo_ok = 0
         self._slo_n = 0
+        # per-tenant serving/SLO tallies (DESIGN.md §14): tenant id ->
+        # [served_cache, served_engine, slo_ok, slo_n]; anonymous
+        # requests (tenant -1) stay out — they are the shared pool
+        self._tenant_counts: dict = {}
         # completions ingested by a previous incarnation (warm restart):
         # report()'s lifetime "completed" is base + this process's cursor
         self._completed_base = 0
@@ -169,10 +176,22 @@ class ServingGateway:
             # tracking for them and keeps no per-request state
             user_ids = np.asarray([-1 if r.user_id is None else r.user_id
                                    for r in batch])
+        tenant_ids = None
+        if any(r.tenant is not None for r in batch):
+            # same -1 sentinel for namespaces (DESIGN.md §14); the kwarg
+            # is only passed when some request carries a tenant, so
+            # tenant-free traffic exercises the exact pre-tenancy path
+            tenant_ids = np.asarray([-1 if r.tenant is None else r.tenant
+                                     for r in batch])
         t0 = time.perf_counter()
         if hasattr(self.frontend, "handle_batch"):
-            res = self.frontend.handle_batch(vectors, now=now,
-                                             user_ids=user_ids)
+            if tenant_ids is not None:
+                res = self.frontend.handle_batch(vectors, now=now,
+                                                 user_ids=user_ids,
+                                                 tenant_ids=tenant_ids)
+            else:
+                res = self.frontend.handle_batch(vectors, now=now,
+                                                 user_ids=user_ids)
         else:
             res = self.frontend.lookup(vectors, now=now, user_ids=user_ids)
         self.stats.lookup_s.append(time.perf_counter() - t0)
@@ -184,7 +203,8 @@ class ServingGateway:
         for b, r in enumerate(batch):
             req = Request(rid=r.rid, tokens=np.asarray(r.model_tokens),
                           max_new=r.max_new, eos_id=r.eos_id,
-                          vector=vectors[b], answer_vec=r.answer_vec)
+                          vector=vectors[b], answer_vec=r.answer_vec,
+                          tenant=-1 if r.tenant is None else int(r.tenant))
             if res.hit[b]:
                 self.sched.admit_resolved(req, res.answer[b])
             else:
@@ -303,6 +323,13 @@ class ServingGateway:
                                     + self._done_cursor),
             "sched_tick": np.asarray(self.sched._tick),
             "last_now": np.asarray(self._last_now),
+            # per-tenant tallies, flattened (DESIGN.md §14)
+            "tenant_ids": np.asarray(sorted(self._tenant_counts),
+                                     np.int64),
+            "tenant_counts": np.asarray(
+                [self._tenant_counts[t]
+                 for t in sorted(self._tenant_counts)],
+                np.int64).reshape(-1, 4),
         }
 
     def load_state(self, state: dict) -> None:
@@ -329,6 +356,14 @@ class ServingGateway:
         self._done_cursor = 0           # fresh process: empty done list
         self.sched._tick = int(state["sched_tick"])
         self._last_now = float(state.get("last_now", 0.0))
+        # .get() fallback: pre-tenancy gateway snapshots load clean
+        tids = np.asarray(state.get("tenant_ids", np.zeros(0, np.int64)),
+                          np.int64)
+        tcounts = np.asarray(state.get("tenant_counts",
+                                       np.zeros((0, 4), np.int64)),
+                             np.int64).reshape(-1, 4)
+        self._tenant_counts = {int(t): [int(c) for c in row]
+                               for t, row in zip(tids, tcounts)}
 
     def snapshot(self, full: bool = True) -> int:
         """Write one snapshot now; returns its step id. Composition:
@@ -446,9 +481,18 @@ class ServingGateway:
                 self._eng_wait_sum += wait
                 self._eng_wait_n += 1
                 self._eng_waits.append(wait)
+            slo_ok = (int(wait <= self.slo_latency)
+                      if self.slo_latency is not None else 0)
             if self.slo_latency is not None:
                 self._slo_n += 1
-                self._slo_ok += int(wait <= self.slo_latency)
+                self._slo_ok += slo_ok
+            tid = int(getattr(r, "tenant", -1))
+            if tid >= 0:
+                tc = self._tenant_counts.setdefault(tid, [0, 0, 0, 0])
+                tc[0 if r.served_by == "cache" else 1] += 1
+                if self.slo_latency is not None:
+                    tc[2] += slo_ok
+                    tc[3] += 1
         self._done_cursor = len(done)
 
     def report(self) -> dict:
@@ -490,4 +534,22 @@ class ServingGateway:
             # tiered hierarchy (DESIGN.md §13): per-tier hit / promotion /
             # demotion counters ride in every report
             rep["tiers"] = cache.tier_stats()
+        tenants = self._tenant_report(s)
+        if tenants:
+            rep["tenants"] = tenants
         return rep
+
+    def _tenant_report(self, frontend_stats: dict) -> dict:
+        """Per-tenant breakdown (DESIGN.md §14): the frontend's cache-side
+        view (hit ratio, overlay, occupancy share) merged with the
+        gateway's serving-side tallies (served split, SLO attainment)."""
+        out: dict = {}
+        for tid, ts in (frontend_stats.get("tenants") or {}).items():
+            out[int(tid)] = dict(ts)
+        for tid, (c, e, ok, n) in self._tenant_counts.items():
+            row = out.setdefault(int(tid), {})
+            row["served_cache"] = c
+            row["served_engine"] = e
+            if self.slo_latency is not None and n:
+                row["slo_attainment"] = ok / n
+        return out

@@ -27,6 +27,9 @@ class Request:
     # pre-computed answer embedding to record on completion (benches and
     # tests that know the ground-truth answer); None -> answer_fn(out)
     answer_vec: Optional[np.ndarray] = None
+    # namespace the request belongs to (DESIGN.md §14); -1 = anonymous /
+    # shared pool — no tenant state is ever created for it
+    tenant: int = -1
     # filled during serving
     out: list = field(default_factory=list)
     slot: int = -1
@@ -151,7 +154,15 @@ class ContinuousBatchScheduler:
             return
         req.answer = ans
         if hasattr(self.cache, "record_llm_answer"):
-            self.cache.record_llm_answer(req.vector, ans, answer_id=req.rid)
+            if req.tenant >= 0:
+                # keyword only for identified tenants: duck-typed
+                # frontends without tenancy never see the new kwarg
+                self.cache.record_llm_answer(req.vector, ans,
+                                             answer_id=req.rid,
+                                             tenant=req.tenant)
+            else:
+                self.cache.record_llm_answer(req.vector, ans,
+                                             answer_id=req.rid)
         else:
             self.cache.insert(req.vector, ans, answer_id=req.rid)
 
@@ -165,4 +176,9 @@ class ContinuousBatchScheduler:
         wait = req.t_done - req.t_submit
         service = (req.t_done - req.t_first
                    if req.served_by == "engine" else None)
-        self.cache.observe_completion(wait, service)
+        if req.tenant >= 0:
+            # per-namespace feedback rides the same completion signal
+            self.cache.observe_completion(wait, service,
+                                          tenant=req.tenant)
+        else:
+            self.cache.observe_completion(wait, service)

@@ -22,6 +22,9 @@ Scenarios (names are the ``SCENARIOS`` registry keys):
                      paraphrases from a small personal topic set drawn
                      from the global popularity, so semantic locality is
                      extreme but exact-vector repeats are rare.
+* ``multi_tenant`` — namespaced streams: power-law tenant sizes, each
+                     tenant mixing private topics with a shared popular
+                     pool (DESIGN.md §14).
 
 Non-homogeneous arrivals use Lewis–Shedler thinning, so any bounded
 rate function works.
@@ -222,12 +225,62 @@ def repeat_heavy(*, dim: int = 32, n_clusters: int = 240, seed: int = 0,
                     extras={"n_users": n_users})
 
 
+def multi_tenant(*, dim: int = 32, n_clusters: int = 240, seed: int = 0,
+                 n_train: int = 1200, n_test: int = 320,
+                 rps: float = 10.0, n_tenants: int = 8,
+                 tenant_s: float = 1.2, personal_per_tenant: int = 3,
+                 personal_frac: float = 0.5,
+                 global_pool: int = 24) -> Scenario:
+    """Namespaced traffic (DESIGN.md §14): tenant sizes follow a power
+    law (tenant 0 floods, the tail trickles), and each request is either
+    a *personal* topic from the tenant's private cluster set — never
+    shared across namespaces — or a draw from a small shared popular
+    pool. Personal clusters are disjoint across tenants, so any
+    cross-tenant hit on a personal topic is an isolation failure by
+    construction. ``extras["tenants"]`` carries the per-request
+    namespace ids (users == tenants here: one stream per namespace)."""
+    wl = SyntheticWorkload("quora", dim=dim, n_clusters=n_clusters, seed=seed)
+    train = wl.sample(n_train, rps=50.0)
+    need = n_tenants * personal_per_tenant + global_pool
+    if need > n_clusters:
+        raise ValueError(f"n_clusters={n_clusters} too small for "
+                         f"{n_tenants}x{personal_per_tenant} personal + "
+                         f"{global_pool} shared clusters")
+    # shared pool = the globally popular head; personal sets are carved
+    # from the tail so they never collide with the pool or each other
+    shared = np.arange(global_pool)
+    personal = (global_pool
+                + np.arange(n_tenants * personal_per_tenant).reshape(
+                    n_tenants, personal_per_tenant))
+    tw = _zipf_weights(n_tenants, tenant_s)
+    tenants = wl.rng.choice(n_tenants, size=n_test, p=tw)
+    pw = _zipf_weights(global_pool, wl.profile.zipf_s)
+    cids = np.empty(n_test, np.int64)
+    is_personal = wl.rng.random(n_test) < personal_frac
+    for i in range(n_test):
+        t = tenants[i]
+        if is_personal[i]:
+            cids[i] = personal[t, wl.rng.integers(personal_per_tenant)]
+        else:
+            cids[i] = shared[wl.rng.choice(global_pool, p=pw)]
+    test = _assemble(wl, cids, poisson_arrivals(wl.rng, n_test, rps),
+                     users=tenants)
+    return Scenario("multi_tenant", train, test,
+                    notes=f"{n_tenants} tenants, zipf(s={tenant_s}) sizes, "
+                          f"{personal_frac:.0%} personal topics",
+                    extras={"tenants": tenants,
+                            "n_tenants": n_tenants,
+                            "personal_clusters": personal,
+                            "shared_clusters": shared})
+
+
 SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "poisson": poisson_steady,
     "bursty": bursty_onoff,
     "diurnal": diurnal_ramp,
     "topic_drift": topic_drift,
     "repeat_heavy": repeat_heavy,
+    "multi_tenant": multi_tenant,
 }
 
 

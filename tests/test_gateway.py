@@ -374,3 +374,62 @@ def test_gateway_repeat_escape(rng, tiny_engine):
     h2 = gw.submit([GatewayRequest(rid=1, model_tokens=toks,
                                    embed_tokens=hot, user_id=7, max_new=4)])
     assert h1[0] and not h2[0]           # same user repeat -> forced miss
+
+
+def test_gateway_tenant_report_and_counter_persistence(rng, tiny_engine):
+    """Per-tenant serving breakdown (DESIGN.md §14): report()["tenants"]
+    merges the frontend's cache-side view (hit ratio, occupancy) with
+    the gateway's served split and SLO attainment, the tallies survive a
+    state_dict round trip, and anonymous requests stay out."""
+    from repro.core.tenancy import TenancyConfig
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    engine, cfg = tiny_engine
+    d = 16
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=64,
+                           dynamic_threshold=False, theta_r=0.9,
+                           tenancy=TenancyConfig()))
+    hist = _unit(rng, 40, d)
+    siso.bootstrap(hist, hist, answer_ids=np.arange(40))
+    clock = _VClock()
+    gw = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                        clock=clock, slo_latency=10.0)
+    hot = siso.cache.centroids.vectors[:2].copy()
+    fresh = _unit(rng, 2, d)
+    toks = np.asarray([1, 2, 3], np.int32)
+    reqs = [
+        GatewayRequest(rid=0, model_tokens=toks, embed_tokens=hot[0],
+                       tenant=1, max_new=4, answer_vec=hot[0]),
+        GatewayRequest(rid=1, model_tokens=toks, embed_tokens=fresh[0],
+                       tenant=1, max_new=4, answer_vec=fresh[0]),
+        GatewayRequest(rid=2, model_tokens=toks, embed_tokens=hot[1],
+                       tenant=2, max_new=4, answer_vec=hot[1]),
+        GatewayRequest(rid=3, model_tokens=toks, embed_tokens=fresh[1],
+                       max_new=4, answer_vec=fresh[1]),    # anonymous
+    ]
+    gw.submit(reqs, now=0.0)
+    while gw.sched.queue or gw.sched.active:
+        gw.step()
+        clock.t += 0.05
+    rep = gw.report()
+    tn = rep["tenants"]
+    assert set(tn) == {1, 2}                    # anonymous stays out
+    assert tn[1]["served_cache"] == 1 and tn[1]["served_engine"] == 1
+    assert tn[2]["served_cache"] == 1 and tn[2]["served_engine"] == 0
+    assert tn[1]["slo_attainment"] == 1.0
+    # cache-side view rode along from the frontend
+    assert tn[1]["hits"] == 1 and tn[1]["misses"] == 1
+    assert tn[1]["hit_ratio"] == pytest.approx(0.5)
+    assert "occupancy_share" in tn[1]
+    # tallies survive a gateway state round trip (and pre-tenancy
+    # snapshots without the keys load clean)
+    st = gw.state_dict()
+    gw2 = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                         clock=clock, slo_latency=10.0)
+    gw2.load_state(st)
+    assert gw2._tenant_counts == gw._tenant_counts
+    for k in ("tenant_ids", "tenant_counts"):
+        del st[k]
+    gw3 = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs),
+                         clock=clock, slo_latency=10.0)
+    gw3.load_state(st)
+    assert gw3._tenant_counts == {}

@@ -431,6 +431,7 @@ def _gateway_shell(siso, d, delta_every=1):
     gw._eng_wait_sum, gw._eng_wait_n = 0.0, 0
     gw._eng_waits = deque(maxlen=8)
     gw._slo_ok = gw._slo_n = 0
+    gw._tenant_counts = {}
     gw._completed_base = 0
     gw._last_now = 0.0
     gw.slo_latency = None

@@ -1,0 +1,479 @@
+"""Multi-tenant semantic caching (DESIGN.md §14): namespace-scoped cache
+views, per-tenant theta, fair-share eviction, and the no-tenant
+bit-identity guarantee."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.siso import SISO, SISOConfig
+from repro.core.tenancy import (REGION_OVERLAY, TenancyConfig,
+                                fair_share_take)
+from repro.core.threshold import DynamicThreshold, T2HTable
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _unit(rng, n, d=16):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _siso(d=16, capacity=16, tenancy="on", **kw):
+    cfg = SISOConfig(dim=d, answer_dim=d, capacity=capacity, theta_r=0.9,
+                     dynamic_threshold=False, refresh_async=False,
+                     tenancy=TenancyConfig() if tenancy == "on"
+                     else tenancy if tenancy != "off" else None, **kw)
+    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+
+
+# ---------------------------------------------------------------------------
+# fair_share_take: the water-filling victim selector
+# ---------------------------------------------------------------------------
+
+
+def test_fair_share_take_hits_largest_namespace_first():
+    tenants = np.asarray([0, 0, 0, 0, 1, 1, 2])
+    key = np.arange(7, dtype=np.float64)        # insertion order
+    v = fair_share_take(tenants, key, 3)
+    # 3 victims all come out of tenant 0 (4 rows) before anyone else
+    assert sorted(tenants[v].tolist()) == [0, 0, 0]
+    # and within the namespace, ascending key (oldest first)
+    assert sorted(v.tolist()) == [0, 1, 2]
+
+
+def test_fair_share_take_incoming_precharge():
+    # equal occupancy, but the INSERTING namespace is pre-charged with
+    # its incoming row, so it gets picked (no free ride for the writer)
+    tenants = np.asarray([0, 0, 1, 1])
+    key = np.arange(4, dtype=np.float64)
+    v = fair_share_take(tenants, key, 1, incoming=1)
+    assert tenants[v[0]] == 1
+
+
+def test_fair_share_take_single_namespace_is_plain_key_order():
+    tenants = np.full(6, -1, np.int64)
+    key = np.asarray([5.0, 1.0, 3.0, 0.0, 4.0, 2.0])
+    v = fair_share_take(tenants, key, 3)
+    assert sorted(v.tolist()) == [1, 3, 5]      # 3 smallest keys
+
+
+# ---------------------------------------------------------------------------
+# no-tenant traffic through a tenancy-configured SISO is bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_no_tenant_lookups_bit_identical(rng):
+    """A tenancy-*configured* frontend serving a stream with no tenant
+    ids must be element-wise identical to a tenancy=None frontend —
+    including through spill evictions (fair-share with every row in the
+    anonymous namespace degrades to the legacy order)."""
+    d = 16
+    a = _siso(d=d, capacity=12, tenancy="off")
+    b = _siso(d=d, capacity=12, tenancy="on")
+    hist = _unit(rng, 30, d)
+    for s in (a, b):
+        s.bootstrap(hist.copy(), hist.copy(), answer_ids=np.arange(30))
+    for k in range(40):     # 40 single inserts through a 12-row cache:
+        q = _unit(rng, 3, d)                    # plenty of evictions
+        ra = a.handle_batch(q.copy(), now=float(k),
+                            user_ids=np.asarray([0, 1, -1]))
+        rb = b.handle_batch(q.copy(), now=float(k),
+                            user_ids=np.asarray([0, 1, -1]))
+        np.testing.assert_array_equal(ra.hit, rb.hit, err_msg=str(k))
+        np.testing.assert_array_equal(ra.sim, rb.sim)
+        np.testing.assert_array_equal(ra.region, rb.region)
+        np.testing.assert_array_equal(ra.answer_id, rb.answer_id)
+        for j in range(3):
+            if not ra.hit[j]:
+                a.record_llm_answer(q[j], q[j], answer_id=100 + 3 * k + j)
+                b.record_llm_answer(q[j], q[j], answer_id=100 + 3 * k + j)
+    np.testing.assert_array_equal(a.cache.spill.answer_id,
+                                  b.cache.spill.answer_id)
+    assert (a.cache.hits, a.cache.misses) == (b.cache.hits, b.cache.misses)
+    assert not b._tenants and not len(b.registry._map)
+
+
+# ---------------------------------------------------------------------------
+# anonymous sentinel (-1) mixed batches through the repeat escape
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_batch_repeat_escape_restores_spill_recency(rng):
+    d = 16
+    s = _siso(d=d, capacity=8)
+    q = _unit(rng, 1, d)[0]
+    s.record_llm_answer(q, q, answer_id=5)      # one spill row
+    ids = np.asarray([7]), np.asarray([3])      # user, tenant
+    r1 = s.handle_batch(q[None], now=0.0, user_ids=ids[0],
+                        tenant_ids=ids[1])
+    assert r1.hit[0] and r1.region[0] == 1      # spill hit
+    lru_after_hit = s.cache._spill_last_use[0]
+    # same user re-asks inside the window: dissatisfied-repeat escape
+    r2 = s.handle_batch(q[None], now=1.0, user_ids=ids[0],
+                        tenant_ids=ids[1])
+    assert not r2.hit[0] and r2.region[0] == -1
+    # the phantom hit's LRU bump was rolled back
+    assert s.cache._spill_last_use[0] == lru_after_hit
+    assert (s.cache.hits, s.cache.misses) == (1, 1)
+    # the escape billed the tenant's own counters
+    assert (s._tenants[3].hits, s._tenants[3].misses) == (1, 1)
+
+
+def test_anonymous_rows_create_no_tenant_state(rng):
+    d = 16
+    s = _siso(d=d, capacity=8)
+    q = _unit(rng, 2, d)
+    s.record_llm_answer(q[0], q[0], answer_id=1)
+    # mixed batch: row 0 fully anonymous, row 1 identified
+    res = s.handle_batch(q, now=0.0, user_ids=np.asarray([-1, 9]),
+                         tenant_ids=np.asarray([-1, 4]))
+    assert res.hit[0] and not res.hit[1]
+    s.record_llm_answer(q[1], q[1], answer_id=2)            # anonymous
+    assert set(s._user_last) == {9}             # no -1 repeat tracking
+    assert set(s._tenants) == {4}               # no -1 namespace
+    assert -1 not in s.registry._map.values()
+    # anonymous rows resolve to the shared pool for eviction purposes
+    assert s.tenants_of(np.asarray([1, 2])).tolist() == [-1, -1]
+    # and the identified ask escaped nothing: the anonymous repeat of
+    # row 0's vector next batch must NOT escape (no tracking happened)
+    r2 = s.handle_batch(q[0][None], now=1.0, user_ids=np.asarray([-1]),
+                        tenant_ids=np.asarray([-1]))
+    assert r2.hit[0]
+
+
+# ---------------------------------------------------------------------------
+# _user_last growth bound (the sweep)
+# ---------------------------------------------------------------------------
+
+
+def test_user_last_sweep_bounds_growth(rng):
+    d = 16
+    s = _siso(d=d, capacity=8, repeat_window=10.0)
+    for k in range(200):    # one new user per second, forever
+        q = _unit(rng, 1, d)
+        s.handle_batch(q, now=float(k), user_ids=np.asarray([k]))
+    # without the sweep this would be 200; with it, at most the users
+    # seen inside one window plus one not-yet-swept window
+    assert len(s._user_last) <= 2 * 10 + 1
+    # and the sweep is semantics-preserving: a live repeat still escapes
+    q = _unit(rng, 1, d)
+    s.record_llm_answer(q[0], q[0], answer_id=999)
+    assert s.handle_batch(q, now=300.0, user_ids=np.asarray([7])).hit[0]
+    assert not s.handle_batch(q, now=301.0,
+                              user_ids=np.asarray([7])).hit[0]
+
+
+# ---------------------------------------------------------------------------
+# fair-share eviction isolation
+# ---------------------------------------------------------------------------
+
+
+def test_fair_share_spill_protects_small_tenant(rng):
+    d = 16
+    vb = _unit(rng, 2, d)
+    va = _unit(rng, 10, d)
+    survivors = {}
+    for mode in ("on", "off"):
+        s = _siso(d=d, capacity=8, tenancy=mode)
+        for i, v in enumerate(vb):      # small tenant (id 1) writes first
+            s.record_llm_answer(v, v, answer_id=100 + i,
+                                tenant=1 if mode == "on" else None)
+        for i, v in enumerate(va):      # then the flood (id 0)
+            s.record_llm_answer(v, v, answer_id=200 + i,
+                                tenant=0 if mode == "on" else None)
+        survivors[mode] = set(s.cache.spill.answer_id.tolist())
+    # weighted: evictions are charged to the flood; the small tenant's
+    # two rows survive. Unweighted LRU: the flood washes them out.
+    assert {100, 101} <= survivors["on"]
+    assert not ({100, 101} & survivors["off"])
+
+
+# ---------------------------------------------------------------------------
+# per-tenant theta
+# ---------------------------------------------------------------------------
+
+
+def _table():
+    thetas = np.asarray([0.98, 0.92, 0.86, 0.80, 0.74, 0.68, 0.62])
+    hits = np.asarray([0.05, 0.15, 0.30, 0.45, 0.60, 0.75, 0.85])
+    return T2HTable(thetas, hits)
+
+
+def test_per_tenant_theta_tracks_each_namespace_rate():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    light, heavy = np.asarray([0] * 1 + [1] * 50), None
+    dta.observe_tenant_arrivals(0.0, light)
+    # before the first window rollover: shared global theta
+    assert dta.tenant_theta(0) == dta.theta
+    assert dta.tenant_theta(1) == dta.theta
+    dta.observe_tenant_arrivals(dta.lambda_window, light)   # rollover
+    # the flooding namespace runs a lower (harder) operating point than
+    # the light one — its fair-share M/D/1 is the loaded one
+    assert dta.tenant_theta(1) < dta.tenant_theta(0)
+    # unknown namespaces keep falling back to the global theta
+    assert dta.tenant_theta(999) == dta.theta
+
+
+def test_tenant_feedback_biases_only_its_namespace():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    arr = np.asarray([0] * 5 + [1] * 5)
+    dta.observe_tenant_arrivals(0.0, arr)
+    dta.observe_tenant_arrivals(dta.lambda_window, arr)
+    th0, th1 = dta.tenant_theta(0), dta.tenant_theta(1)
+    for _ in range(3):      # tenant 1 keeps blowing its SLO
+        dta.observe_completion(50.0, tenant=1)
+    assert dta.tenant_theta(1) < th1
+    assert dta.tenant_theta(0) == th0
+
+
+def test_threshold_tenant_state_roundtrip():
+    dta = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    arr = np.asarray([0] * 2 + [1] * 40)
+    dta.observe_tenant_arrivals(0.0, arr)
+    dta.observe_tenant_arrivals(dta.lambda_window, arr)
+    dta.observe_completion(50.0, tenant=1)
+    d2 = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    d2.load_state(dta.state_dict())
+    assert d2._tenants == dta._tenants
+    assert d2.tenant_theta(0) == dta.tenant_theta(0)
+    assert d2.tenant_theta(1) == dta.tenant_theta(1)
+    # pre-tenancy snapshots (no "tenants" key) still load clean
+    st = dta.state_dict()
+    del st["tenants"]
+    d3 = DynamicThreshold(_table(), slo_latency=1.0, llm_latency=0.9)
+    d3.load_state(st)
+    assert d3._tenants == {}
+
+
+# ---------------------------------------------------------------------------
+# overlay routing: personal answers never reach the shared pool
+# ---------------------------------------------------------------------------
+
+
+def test_personal_answers_live_in_overlay_only(rng):
+    d = 16
+    s = _siso(d=d, capacity=16)
+    v1 = _unit(rng, 1, d)[0]
+    v2 = v1 + 0.02 * rng.normal(size=d).astype(np.float32)
+    v2 /= np.linalg.norm(v2)
+    s.record_llm_answer(v1, v1, answer_id=1, tenant=2)  # window empty ->
+    assert 1 in s.cache.spill.answer_id                 # shared spill
+    s.record_llm_answer(v2, v2, answer_id=2, tenant=2)  # personal
+    assert 2 not in s.cache.spill.answer_id
+    assert len(s._log_vecs) == 1                        # never clustered
+    assert len(s._tenants[2].overlay) == 1
+    # the owner is served from its overlay (region 4), with ITS answer
+    res = s.handle_batch(v2[None], now=0.0, tenant_ids=np.asarray([2]))
+    assert res.hit[0] and res.region[0] == REGION_OVERLAY
+    assert res.answer_id[0] == 2
+    # anyone else asking the same thing gets the SHARED entry, never the
+    # personal one
+    other = s.handle_batch(v2[None], now=0.0, tenant_ids=np.asarray([-1]))
+    assert other.hit[0] and other.region[0] != REGION_OVERLAY
+    assert other.answer_id[0] == 1
+    st = s.tenant_stats()[2]
+    assert st["overlay_rows"] == 1 and st["overlay_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# persistence: tenancy state round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_tenancy_state_roundtrip_and_lockstep(rng):
+    d = 16
+    a = _siso(d=d, capacity=12)
+    hist = _unit(rng, 20, d)
+    a.bootstrap(hist, hist, answer_ids=np.arange(20))
+    for k in range(15):
+        q = _unit(rng, 2, d)
+        res = a.handle_batch(q, now=float(k),
+                             user_ids=np.asarray([0, 1]),
+                             tenant_ids=np.asarray([k % 3, -1]))
+        for j in range(2):
+            if not res.hit[j]:
+                a.record_llm_answer(q[j], q[j], answer_id=100 + 2 * k + j,
+                                    tenant=k % 3 if j == 0 else None)
+    # make one entry personal so the overlay round-trips non-empty
+    v = _unit(rng, 1, d)[0]
+    a.record_llm_answer(v, v, answer_id=500, tenant=0)
+    a.record_llm_answer(v, v, answer_id=501, tenant=0)
+    assert any(len(ts.overlay) for ts in a._tenants.values())
+
+    b = _siso(d=d, capacity=12)
+    b.load_state(a.state_dict())
+    b.warm_start()
+    assert a.tenant_stats() == b.tenant_stats()
+    assert a.registry._map == b.registry._map
+    # continued serving stays in lockstep, tenants included
+    for k in range(15, 25):
+        q = _unit(rng, 2, d)
+        ra = a.handle_batch(q.copy(), now=float(k),
+                            user_ids=np.asarray([0, 1]),
+                            tenant_ids=np.asarray([k % 3, 1]))
+        rb = b.handle_batch(q.copy(), now=float(k),
+                            user_ids=np.asarray([0, 1]),
+                            tenant_ids=np.asarray([k % 3, 1]))
+        np.testing.assert_array_equal(ra.hit, rb.hit)
+        np.testing.assert_array_equal(ra.region, rb.region)
+        for j in range(2):
+            if not ra.hit[j]:
+                a.record_llm_answer(q[j], q[j], answer_id=600 + 2 * k + j,
+                                    tenant=int(k % 3))
+                b.record_llm_answer(q[j], q[j], answer_id=600 + 2 * k + j,
+                                    tenant=int(k % 3))
+    assert a.tenant_stats() == b.tenant_stats()
+    assert a.stats() == b.stats()
+
+
+def test_pre_tenancy_snapshot_loads_clean(rng):
+    """A snapshot taken by a tenancy=None frontend must load into a
+    tenancy-configured one (and vice versa) without tenant keys."""
+    d = 16
+    old = _siso(d=d, capacity=12, tenancy="off")
+    hist = _unit(rng, 20, d)
+    old.bootstrap(hist, hist, answer_ids=np.arange(20))
+    st = old.state_dict()
+    assert "tenancy" not in st
+    new = _siso(d=d, capacity=12)
+    new.load_state(st)          # .get() fallbacks: no KeyError
+    assert new._tenants == {}
+    q = _unit(rng, 1, d)
+    assert new.handle_batch(q, now=0.0).hit.shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant + tiered hierarchy: save -> SIGKILL -> warm_start lockstep
+# ---------------------------------------------------------------------------
+
+_TENANT_SCAFFOLD = """
+import numpy as np
+from repro.core.siso import SISO, SISOConfig
+from repro.core.tenancy import TenancyConfig
+from repro.core.tiered import TieredCacheConfig
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+def make(disk_dir):
+    cfg = SISOConfig(dim=16, answer_dim=16, capacity=24, refresh_min=8,
+                     refresh_async=False, tenancy=TenancyConfig(),
+                     tiered=TieredCacheConfig(host_capacity=32,
+                                              disk_capacity=128,
+                                              disk_dir=disk_dir,
+                                              device_reserve=6,
+                                              promote_budget=4))
+    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+
+def drive(s, seed, t0, steps):
+    rng = np.random.default_rng(seed)
+    for k in range(steps):
+        q = norm(rng.normal(size=(4, 16)).astype(np.float32))
+        res = s.handle_batch(q.copy(), now=float(t0 + k),
+                             user_ids=np.arange(4) % 3,
+                             tenant_ids=np.asarray([0, 1, 2, -1]))
+        for b in range(4):
+            if not res.hit[b]:
+                s.record_llm_answer(q[b], q[b],
+                                    answer_id=10_000 + 4 * (t0 + k) + b,
+                                    tenant=int([0, 1, 2, -1][b]))
+        s.observe_completion(0.3, 0.2, tenant=int(k % 3))
+        s.refresh_tick(0.0)
+
+def populate(s):
+    rng = np.random.default_rng(11)
+    train = norm(rng.normal(size=(120, 16)).astype(np.float32))
+    s.bootstrap(train, train, answer_ids=np.arange(120))
+    drive(s, 12, 0, 40)
+"""
+
+_TENANT_CHILD = _TENANT_SCAFFOLD + """
+import os, signal
+from repro.checkpoint import CheckpointManager
+
+base = os.environ["TENANT_DRILL_DIR"]
+s = make(os.path.join(base, "cold"))
+populate(s)
+CheckpointManager(os.path.join(base, "ckpt"), keep=2).save(
+    1, {"siso": s.state_dict()})
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def test_tenant_save_sigkill_warmstart_equivalence(tmp_path):
+    """A populated multi-tenant 3-tier hierarchy snapshotted and then
+    SIGKILLed must warm-start with tenancy state (overlays, registry,
+    per-tenant counters) identical to an uninterrupted run, and keep
+    serving in lockstep."""
+    import signal
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env["TENANT_DRILL_DIR"] = str(tmp_path)
+    out = subprocess.run([sys.executable, "-c", _TENANT_CHILD], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == -signal.SIGKILL, out.stderr[-3000:]
+
+    ns = {}
+    exec(compile(_TENANT_SCAFFOLD, "<tenant-scaffold>", "exec"), ns)
+    s1 = ns["make"](str(tmp_path / "ref_cold"))
+    ns["populate"](s1)
+
+    from repro.checkpoint import CheckpointManager
+    step, rec = CheckpointManager(str(tmp_path / "ckpt"),
+                                  keep=2).restore_latest()
+    assert step == 1
+    s2 = ns["make"](str(tmp_path / "cold"))
+    s2.load_state(rec["siso"])
+    s2.warm_start()
+
+    assert s1.tenant_stats() == s2.tenant_stats()
+    assert s1.registry._map == s2.registry._map
+    assert s1._tenants.keys() == s2._tenants.keys()
+    for tid, ts in s1._tenants.items():
+        np.testing.assert_array_equal(ts.overlay.answer_id,
+                                      s2._tenants[tid].overlay.answer_id)
+    for tier, arr in s1.cache.tier_membership().items():
+        np.testing.assert_array_equal(
+            arr, s2.cache.tier_membership()[tier], err_msg=tier)
+
+    # continued serving stays in lockstep (phase B, fresh seed)
+    ns["drive"](s1, 13, 40, 15)
+    ns["drive"](s2, 13, 40, 15)
+    assert s1.tenant_stats() == s2.tenant_stats()
+    assert s1.stats() == s2.stats()
+    for tier, arr in s1.cache.tier_membership().items():
+        np.testing.assert_array_equal(
+            arr, s2.cache.tier_membership()[tier], err_msg=tier)
+
+
+# ---------------------------------------------------------------------------
+# multi_tenant workload scenario
+# ---------------------------------------------------------------------------
+
+
+def test_multi_tenant_scenario_shape():
+    from repro.serving.workloads import build_scenario
+    sc = build_scenario("multi_tenant", n_test=400, n_tenants=6,
+                        seed=1)
+    t = sc.extras["tenants"]
+    assert len(t) == 400 and t.min() >= 0 and t.max() < 6
+    # power-law sizes: the head tenant dominates the tail
+    counts = np.bincount(t, minlength=6)
+    assert counts[0] > counts[-1]
+    # personal clusters are disjoint from the shared pool and each other
+    personal = sc.extras["personal_clusters"]
+    shared = set(sc.extras["shared_clusters"].tolist())
+    flat = personal.ravel().tolist()
+    assert len(set(flat)) == len(flat)
+    assert not (set(flat) & shared)
+    # every request draws from its own tenant's personal set or the pool
+    for i in range(400):
+        cid = int(sc.test.cluster_ids[i])
+        assert cid in shared or cid in set(personal[t[i]].tolist())
+    # users carry the tenant ids (one stream per namespace)
+    np.testing.assert_array_equal(sc.test.user_ids, t)

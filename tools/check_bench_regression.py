@@ -83,6 +83,22 @@ METRICS = [
     ("BENCH_tiered.json", "p99_within_2x",
      "true", None, None,
      "3-tier lookup p99 within 2x of the single-tier lookup p99"),
+    ("BENCH_tenancy.json", "weighted_rel_degradation",
+     "lower", "abs", 0.05,
+     "steady tenant's relative hit-ratio loss under flood, tenancy on"),
+    ("BENCH_tenancy.json", "unweighted_rel_degradation",
+     "higher", "abs", 0.10,
+     "same loss on the unweighted shared pool (the failure must show)"),
+    ("BENCH_tenancy.json", "isolation_holds",
+     "true", None, None,
+     "weighted degradation < 10% relative AND unweighted > 40%"),
+    ("BENCH_tenancy.json", "no_tenant_identical",
+     "true", None, None,
+     "tenancy-configured SISO element-wise identical on tenant-free "
+     "traffic"),
+    ("BENCH_tenancy.json", "drill.identical",
+     "true", None, None,
+     "multi-tenant save/restore replay element-wise identical"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
