@@ -1,0 +1,241 @@
+"""Quantized cache plane benchmark (EXPERIMENTS.md §Quant, DESIGN.md §15).
+
+Three measurements, every one of them a correctness gate as much as a
+speed number:
+
+1. **Capacity per device byte** — identical corpora loaded into the f32
+   pallas plane and the int8 `pallas_q8` plane; the ratio of device
+   bytes per resident row (from ``SemanticCache.memory_bytes()``) must
+   be >= 2x in favour of the quant plane. At dim=256 the codes row is
+   256 B vs 1024 B f32, and the quant plane drops the device answer
+   payload entirely (answers are gathered host-side), so the measured
+   ratio lands near 4x.
+
+2. **Decision exactness** — a randomized lookup stream (hits, misses,
+   near-theta queries, interleaved spill inserts) served by the quant
+   plane and by the dense reference; every LookupResult field (hit,
+   sim, entry, answer, answer_id) must be element-wise identical.
+   This is the margin-rescore guarantee of DESIGN.md §15: quantization
+   changes WHERE candidates come from, never WHAT the cache answers.
+
+3. **Sharded quant latency** — batched quant lookups at S=1..8 shards
+   on a forced 8-device host (self re-exec, same trick as bench_shard);
+   ``shard_p99_ratio`` = p99(S=max)/p99(S=1) is the machine-independent
+   gate metric: the sharded dispatch must not blow up tail latency.
+
+Writes results/BENCH_quant.json. Full mode asserts the >=2x capacity
+ratio and exactness; --smoke runs tiny sizes without assertions (the CI
+gate compares the JSON against the committed baseline via
+tools/check_bench_regression.py).
+
+  PYTHONPATH=src python -m benchmarks.bench_quant [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+DIM = 256          # 64-dim codes lane-pad to 128 B/row and cap the ratio
+ANSWER_DIM = 64    # near 2x; 256-dim shows the honest ~4x (DESIGN.md §15)
+BATCH = 64
+SHARD_COUNTS = [1, 2, 4, 8]
+_INNER_ENV = "_BENCH_QUANT_INNER"
+
+
+def _reexec_with_devices(smoke: bool, n: int = 8) -> int:
+    """jax fixes the device count at backend init, so the measurement
+    runs in a child process with the forced-host-device flag set."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env[_INNER_ENV] = "1"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
+        + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, os.path.abspath(__file__)]
+    if smoke:
+        cmd.append("--smoke")
+    return subprocess.run(cmd, env=env).returncode
+
+
+def _corpus(rng, n):
+    v = rng.normal(size=(n, DIM)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _make_cache(backend: str, capacity: int, n_shards: int = 1):
+    from repro.core.semantic_cache import SemanticCache
+    from repro.distributed.cache_plane import ShardedCacheConfig
+    shard = ShardedCacheConfig(n_shards=n_shards) if n_shards > 1 else None
+    return SemanticCache(DIM, ANSWER_DIM, capacity=capacity,
+                         backend=backend, shard=shard)
+
+
+def _fill(cache, vecs):
+    from repro.core.store import CentroidStore
+    st = CentroidStore(DIM, ANSWER_DIM)
+    st.add(vecs, vecs[:, :ANSWER_DIM],
+           np.arange(len(vecs), 0, -1, dtype=np.float64),
+           answer_id=np.arange(len(vecs)))
+    cache.set_centroids(st)
+
+
+def bench_capacity(rows: int) -> dict:
+    """Same corpus, f32 plane vs quant plane: device bytes per row."""
+    rng = np.random.default_rng(0)
+    vecs = _corpus(rng, rows)
+    out = {}
+    for backend in ("pallas", "pallas_q8"):
+        cache = _make_cache(backend, capacity=rows)
+        _fill(cache, vecs)
+        cache.lookup(_corpus(rng, 4), 0.9, update_counts=False)  # build
+        mem = cache.memory_bytes()
+        out[backend] = {
+            "rows": mem["rows"],
+            "device_total_bytes": mem["device_total_bytes"],
+            "codes_bytes": mem["codes_bytes"],
+            "scales_bytes": mem["scales_bytes"],
+            "bytes_per_row": mem["device_total_bytes"] / max(1, mem["rows"]),
+        }
+        print(f"  {backend:10s}  rows={mem['rows']:>6}  "
+              f"device={mem['device_total_bytes'] / 1e6:7.3f} MB  "
+              f"({out[backend]['bytes_per_row']:8.1f} B/row)")
+    ratio = (out["pallas"]["bytes_per_row"]
+             / out["pallas_q8"]["bytes_per_row"])
+    out["capacity_per_byte_ratio"] = float(ratio)
+    print(f"  capacity per device byte: {ratio:.2f}x in favour of int8")
+    return out
+
+
+def bench_exactness(rows: int, steps: int) -> dict:
+    """Randomized stream: quant plane vs dense reference, all fields."""
+    rng = np.random.default_rng(1)
+    vecs = _corpus(rng, rows)
+    q8 = _make_cache("pallas_q8", capacity=rows * 2)
+    ref = _make_cache("dense", capacity=rows * 2)
+    for c in (q8, ref):
+        _fill(c, vecs)
+    mismatches = 0
+    checked = 0
+    for step in range(steps):
+        b = int(rng.integers(1, BATCH + 1))
+        q = _corpus(rng, b)
+        # bias some queries toward cached rows so both branches exercise
+        reuse = rng.random(b) < 0.5
+        q[reuse] = vecs[rng.integers(0, rows, int(reuse.sum()))]
+        theta = float(rng.choice([0.6, 0.8, 0.9, 0.95, 0.999]))
+        ra = q8.lookup(q, theta)
+        rb = ref.lookup(q, theta)
+        for f in ("hit", "sim", "entry", "answer", "answer_id"):
+            checked += 1
+            if not np.array_equal(np.asarray(getattr(ra, f)),
+                                  np.asarray(getattr(rb, f))):
+                mismatches += 1
+        if step % 3 == 0:     # interleave writes: spill path stays exact
+            v = _corpus(rng, 1)[0]
+            for c in (q8, ref):
+                c.insert_spill(v, v[:ANSWER_DIM], answer_id=10_000 + step)
+    exact = mismatches == 0 and (q8.hits, q8.misses) == (ref.hits,
+                                                         ref.misses)
+    out = {"steps": steps, "fields_checked": checked,
+           "field_mismatches": mismatches,
+           "counters_equal": (q8.hits, q8.misses) == (ref.hits, ref.misses),
+           "quant_rescored": int(q8.quant_rescored),
+           "quant_fallbacks": int(q8.quant_fallbacks),
+           "decisions_exact": bool(exact)}
+    print(f"  {steps} steps, {checked} field compares, "
+          f"{mismatches} mismatches, rescored={out['quant_rescored']} "
+          f"fallbacks={out['quant_fallbacks']}  exact={exact}")
+    return out
+
+
+def bench_shard_latency(total_rows: int, reps: int) -> list[dict]:
+    """Quant lookup p50/p99 vs shard count, exactness vs S=1 quant."""
+    rng = np.random.default_rng(2)
+    vecs = _corpus(rng, total_rows)
+    queries = _corpus(rng, BATCH)
+    queries[: BATCH // 4] = vecs[rng.integers(0, total_rows, BATCH // 4)]
+    ref = _make_cache("pallas_q8", capacity=total_rows)
+    _fill(ref, vecs)
+    r_ref = ref.lookup(queries, 0.9, update_counts=False)
+    out = []
+    for S in SHARD_COUNTS:
+        cache = _make_cache("pallas_q8", capacity=total_rows, n_shards=S)
+        _fill(cache, vecs)
+        res = cache.lookup(queries, 0.9, update_counts=False)  # warm + jit
+        equal = all(np.array_equal(getattr(r_ref, f), getattr(res, f))
+                    for f in ("hit", "sim", "answer", "answer_id", "entry"))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            cache.lookup(queries, 0.9, update_counts=False)
+            ts.append(time.perf_counter() - t0)
+        ts = np.asarray(ts) * 1e3
+        row = {"n_shards": S, "total_rows": int(total_rows),
+               "batch": BATCH,
+               "p50_ms": float(np.percentile(ts, 50)),
+               "p99_ms": float(np.percentile(ts, 99)),
+               "equal_to_reference": bool(equal)}
+        print(f"  S={S}  p50={row['p50_ms']:7.3f}ms  "
+              f"p99={row['p99_ms']:7.3f}ms  exact={equal}")
+        out.append(row)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, no acceptance assertions")
+    # parse_known_args: benchmarks.run invokes main() with its own argv
+    args, _ = ap.parse_known_args()
+
+    if os.environ.get(_INNER_ENV) != "1":
+        import jax
+        if jax.device_count() < max(SHARD_COUNTS):
+            print(f"re-exec with {max(SHARD_COUNTS)} forced host devices")
+            return _reexec_with_devices(args.smoke)
+
+    rows, steps, total, reps = ((256, 8, 512, 10) if args.smoke
+                                else (2048, 40, 4096, 50))
+    print("capacity per device byte (f32 plane vs int8 plane):")
+    cap = bench_capacity(rows)
+    print("decision exactness (quant plane vs dense reference):")
+    ex = bench_exactness(rows, steps)
+    print("sharded quant lookup latency:")
+    lat = bench_shard_latency(total, reps)
+    payload = {"capacity": cap, "exactness": ex, "latency": lat,
+               "dim": DIM,
+               "capacity_per_byte_ratio": cap["capacity_per_byte_ratio"],
+               "decisions_exact": ex["decisions_exact"],
+               # machine-independent tail-flatness ratio (gate metric):
+               # max-shard p99 over single-shard p99 on the same host
+               "shard_p99_ratio": lat[-1]["p99_ms"] / lat[0]["p99_ms"],
+               "smoke": bool(args.smoke)}
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "BENCH_quant.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+
+    assert ex["decisions_exact"], \
+        "quant plane decisions diverged from the dense reference"
+    assert all(r["equal_to_reference"] for r in lat), \
+        "sharded quant lookup diverged from the 1-device quant reference"
+    if not args.smoke:
+        assert payload["capacity_per_byte_ratio"] >= 2.0, (
+            f"capacity per byte only "
+            f"{payload['capacity_per_byte_ratio']:.2f}x (< 2x)")
+        print("acceptance OK: >=2x capacity per device byte, exact "
+              "decisions, exact sharded lookups")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

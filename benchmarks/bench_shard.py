@@ -166,6 +166,7 @@ def main() -> int:
                # over single-shard p50 on the same host (the gate metric —
                # absolute ms vary across CI runners, the ratio does not)
                "s_max_over_s1_p50": lat[-1]["p50_ms"] / lat[0]["p50_ms"],
+               "s_max_over_s1_p99": lat[-1]["p99_ms"] / lat[0]["p99_ms"],
                "smoke": bool(args.smoke)}
     os.makedirs("results", exist_ok=True)
     path = os.path.join("results", "BENCH_shard.json")

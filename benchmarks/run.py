@@ -33,6 +33,7 @@ BENCHES = [
     "bench_restart",        # EXPERIMENTS.md §Restart kill-and-recover drill
     "bench_tiered",         # EXPERIMENTS.md §Tiered hierarchy drill
     "bench_tenancy",        # EXPERIMENTS.md §Tenancy isolation drill
+    "bench_quant",          # EXPERIMENTS.md §Quant int8 plane drill
 ]
 
 

@@ -10,7 +10,11 @@ Lookup backends:
   * "dense"  — jitted MXU-style top-1 over a padded matrix (TPU-native
                adaptation of the paper's HNSW; exact, recall = 1);
   * "hnsw"   — locality-ordered HNSW (CPU-fidelity path, §4.3);
-  * "pallas" — the cosine_topk kernel (interpret mode on CPU).
+  * "pallas" — the cosine_topk kernel (interpret mode on CPU);
+  * "pallas_q8" — int8 centroid plane with in-kernel dequant and exact
+               theta-margin rescoring (DESIGN.md §15): ~4x rows per
+               device byte, accept/reject decisions bit-identical to
+               "dense".
 Entries are ordered by cluster_size (strong semantic locality first), the
 tiled analog of SISO's hot-centroids-in-upper-HNSW-levels layout — it gives
 the Pallas kernel's early-exit tiles their hit-mass skew.
@@ -57,7 +61,22 @@ import numpy as np
 from repro.core.clustering import _pow2_pad
 from repro.core.store import CentroidStore
 from repro.distributed.cache_plane import (ShardedCacheConfig,
-                                           ShardedDeviceState, shard_pad)
+                                           ShardedDeviceState,
+                                           ShardedQuantState, shard_pad)
+from repro.kernels.cosine_topk.ops import quantize_rows
+
+# Absolute slack added to the quant rescoring margin (DESIGN.md §15) on
+# top of the Cauchy-Schwarz bound ||q|| * err_max: absorbs the f32
+# accumulation-order difference between the int8 kernel's tiled matmul
+# and the exact bound's real-arithmetic model. Oversizing it never breaks
+# exactness — it only widens the candidate window (more rescored rows /
+# rare dense fallbacks), so it is set generously.
+QUANT_SLACK = 1e-3
+
+
+def _lane_pad(d: int) -> int:
+    """Lane-width (128) padded feature dim for device mirrors."""
+    return (max(d, 1) + 127) // 128 * 128
 
 
 @jax.jit
@@ -102,6 +121,29 @@ _write_row_donated = jax.jit(_write_row_impl, donate_argnums=(0, 1, 2, 3))
 _write_row_plain = jax.jit(_write_row_impl)
 
 
+def _write_qrow_impl(codes, scales, valid, row, crow, scale):
+    codes = jax.lax.dynamic_update_slice(codes, crow[None, :], (row, 0))
+    scales = scales.at[row].set(scale)
+    valid = valid.at[row].set(True)
+    return codes, scales, valid
+
+
+_write_qrow_donated = jax.jit(_write_qrow_impl, donate_argnums=(0, 1, 2))
+_write_qrow_plain = jax.jit(_write_qrow_impl)
+
+
+@jax.jit
+def _rescore_mm(queries: jax.Array, mat: jax.Array) -> jax.Array:
+    """Full-precision similarity block for the quant rescoring pass.
+
+    Must be the exact contraction `_fused_top1` uses (queries @ mat.T on
+    device): XLA keeps a row's dot product bitwise independent of which
+    *other* rows share the matmul, so rescoring a gathered row subset
+    reproduces the f32 reference similarities bit for bit.
+    """
+    return queries @ mat.T
+
+
 @dataclass
 class _DeviceState:
     """Persistent device-resident mirror of centroid + spill regions."""
@@ -130,6 +172,39 @@ class _DeviceState:
 
 
 @dataclass
+class _QuantDeviceState:
+    """Device mirror for the int8 plane (backend "pallas_q8", DESIGN.md
+    §15): per-row symmetric codes + scales, no answer matrix — answers
+    stay host-side (gathered per hit), which is where most of the >=2x
+    capacity-per-byte comes from on top of the 4x code compression."""
+    codes: jax.Array    # (pad, dpad) int8, lane-padded codes
+    scales: jax.Array   # (pad,) float32 per-row scales
+    valid: jax.Array    # (pad,) bool
+    pad: int
+    dpad: int
+    err_max: float      # running max per-row dequant L2 error (monotone
+                        # across row patches; exact after a full rebuild)
+
+    @property
+    def rows(self) -> int:
+        return self.pad
+
+    def write_row(self, row: int, vec: np.ndarray, answer: np.ndarray,
+                  answer_id: int) -> None:
+        """Donated in-place spill patch: quantize the row host-side, write
+        the code row + scale in one jitted update. ``answer``/``answer_id``
+        are ignored — the quant plane never holds answers on device."""
+        crow, scale, err = quantize_rows(
+            np.asarray(vec, np.float32).reshape(1, -1), width=self.dpad)
+        fn = _write_qrow_plain if jax.default_backend() == "cpu" \
+            else _write_qrow_donated
+        self.codes, self.scales, self.valid = fn(
+            self.codes, self.scales, self.valid, jnp.int32(row),
+            jnp.array(crow[0]), jnp.float32(scale[0]))
+        self.err_max = max(self.err_max, float(err[0]))
+
+
+@dataclass
 class LookupResult:
     hit: np.ndarray        # (B,) bool
     sim: np.ndarray        # (B,) float32 best similarity
@@ -144,12 +219,22 @@ class LookupResult:
 class SemanticCache:
     def __init__(self, dim: int, answer_dim: int, capacity: int,
                  backend: str = "dense", spill_lru: bool = True,
-                 shard: Optional[ShardedCacheConfig] = None):
+                 shard: Optional[ShardedCacheConfig] = None,
+                 rescore_k: int = 16):
+        if backend not in ("dense", "hnsw", "pallas", "pallas_q8"):
+            raise ValueError(f"unknown cache backend {backend!r}")
         self.dim = dim
         self.answer_dim = answer_dim
         self.capacity = capacity
         self.backend = backend
         self.spill_lru = spill_lru
+        # quant plane (DESIGN.md §15): top-C quant candidates fetched per
+        # query for the exact full-precision rescore; larger C lowers the
+        # dense-fallback rate, never changes results
+        self.rescore_k = rescore_k
+        self.quant_rescored = 0     # full-precision rows rescored
+        self.quant_fallbacks = 0    # margin-coverage misses -> dense ref
+        self._quant_restore: Optional[dict] = None
         # n_shards == 1 deliberately degrades to shard=None: the 1-device
         # mesh path IS the single-device path, bit for bit (DESIGN.md §11)
         self.shard = shard if shard is not None and shard.n_shards > 1 \
@@ -221,6 +306,7 @@ class SemanticCache:
         self.centroids = store
         self._trim_spill()
         self._restore_pending = False   # a real new state supersedes restore
+        self._quant_restore = None
         self._invalidate()
 
     def _trim_spill(self) -> None:
@@ -270,6 +356,7 @@ class SemanticCache:
             keep = np.where(~dup)[0]
             self.spill.take(keep)
             self._spill_last_use = self._spill_last_use[keep]
+            self._quant_restore = None
             self._invalidate()
         return n
 
@@ -302,15 +389,63 @@ class SemanticCache:
         else:
             self.generation += 1
 
+    @property
+    def _mat_width(self) -> int:
+        """Feature width of the f32 device mirror. The pallas backend
+        stores the mirror lane-padded (multiple of 128) so the kernel's
+        pre-padded fast path applies — zero columns beyond ``dim``
+        contribute exactly 0.0 to every dot product, so results are
+        bit-identical to the unpadded layout."""
+        return _lane_pad(self.dim) if self.backend == "pallas" else self.dim
+
+    def _quantize_all(self, vecs: np.ndarray) -> tuple:
+        """(codes, scales, err_max) for the full host row set, honoring a
+        pending snapshot restore (codes+scales round-trip the snapshot so
+        a warm restart serves from the very same quantized plane)."""
+        n = len(vecs)
+        dpad = _lane_pad(self.dim)
+        restore, self._quant_restore = self._quant_restore, None
+        if restore is not None:
+            codes = np.asarray(restore["codes"], np.int8)
+            scales = np.asarray(restore["scales"], np.float32)
+            if len(codes) == n and codes.shape[1] == dpad \
+                    and len(scales) == n:
+                return codes, scales, float(restore["err_max"])
+        codes, scales, err = quantize_rows(vecs, width=dpad)
+        return codes, scales, float(err.max()) if n else 0.0
+
     def _device_state(self):
         if self._dev is None:
             nc = len(self.centroids)
             n = nc + len(self.spill)
+
+            def cat(attr):
+                a = getattr(self.centroids, attr)
+                return a if not len(self.spill) else \
+                    np.concatenate([a, getattr(self.spill, attr)])
+
+            if self.backend == "pallas_q8":   # int8 plane (DESIGN.md §15)
+                codes, scales, err_max = self._quantize_all(
+                    cat("vectors").reshape(n, self.dim))
+                dpad = _lane_pad(self.dim)
+                if self.shard is not None:
+                    self._dev = ShardedQuantState.build(
+                        self.shard.make_mesh(), self.shard.n_shards,
+                        codes, scales, err_max=err_max,
+                        pad_floor=max(self.shard.pad_floor, 128))
+                else:
+                    pad = _pow2_pad(n)
+                    cp = np.zeros((pad, dpad), np.int8)
+                    sp = np.zeros((pad,), np.float32)
+                    valid = np.zeros((pad,), bool)
+                    cp[:n], sp[:n], valid[:n] = codes, scales, True
+                    self._dev = _QuantDeviceState(
+                        jnp.asarray(cp), jnp.asarray(sp),
+                        jnp.asarray(valid), pad, dpad, err_max)
+                self.dev_rebuilds += 1
+                self._bump_generation()
+                return self._dev
             if self.shard is not None:   # mesh plane (DESIGN.md §11)
-                def cat(attr):
-                    a = getattr(self.centroids, attr)
-                    return a if not len(self.spill) else \
-                        np.concatenate([a, getattr(self.spill, attr)])
                 self._dev = ShardedDeviceState.build(
                     self.shard.make_mesh(), self.shard.n_shards,
                     cat("vectors").reshape(n, self.dim),
@@ -321,16 +456,16 @@ class SemanticCache:
                 self._bump_generation()
                 return self._dev
             pad = _pow2_pad(n)
-            mat = np.zeros((pad, self.dim), np.float32)
+            mat = np.zeros((pad, self._mat_width), np.float32)
             ans = np.zeros((pad, self.answer_dim), np.float32)
             valid = np.zeros((pad,), bool)
             aid = np.full((pad,), -1, np.int32)
             if nc:
-                mat[:nc] = self.centroids.vectors
+                mat[:nc, :self.dim] = self.centroids.vectors
                 ans[:nc] = self.centroids.answers
                 aid[:nc] = self.centroids.answer_id
             if len(self.spill):
-                mat[nc:n] = self.spill.vectors
+                mat[nc:n, :self.dim] = self.spill.vectors
                 ans[nc:n] = self.spill.answers
                 aid[nc:n] = self.spill.answer_id
             valid[:n] = True
@@ -357,6 +492,29 @@ class SemanticCache:
         already routed to its owner shard and the commit upload is one
         shard-local transfer per shard (DESIGN.md §11)."""
         keep_spill = min(len(self.spill), max(0, self.capacity - n_new))
+        if self.backend == "pallas_q8":
+            # quant staging (DESIGN.md §15): codes + scales are built in
+            # the same host buffers and committed in the same single
+            # upload + atomic pointer swap as the f32 mirror; no answer
+            # matrix is staged (answers never live on the quant device)
+            dpad = _lane_pad(self.dim)
+            if self.shard is not None:
+                S = self.shard.n_shards
+                pad = shard_pad(n_new + keep_spill, S,
+                                max(self.shard.pad_floor, 128))
+                self._shadow = {
+                    "codes": np.zeros((S, pad, dpad), np.int8),
+                    "scales": np.zeros((S, pad), np.float32),
+                    "valid": np.zeros((S, pad), bool),
+                    "err_max": 0.0, "n_new": n_new, "filled": 0}
+                return
+            pad = _pow2_pad(n_new + keep_spill)
+            self._shadow = {
+                "codes": np.zeros((pad, dpad), np.int8),
+                "scales": np.zeros((pad,), np.float32),
+                "valid": np.zeros((pad,), bool),
+                "err_max": 0.0, "n_new": n_new, "filled": 0}
+            return
         if self.shard is not None:
             S = self.shard.n_shards
             pad = shard_pad(n_new + keep_spill, S, self.shard.pad_floor)
@@ -369,7 +527,7 @@ class SemanticCache:
             return
         pad = _pow2_pad(n_new + keep_spill)
         self._shadow = {
-            "mat": np.zeros((pad, self.dim), np.float32),
+            "mat": np.zeros((pad, self._mat_width), np.float32),
             "ans": np.zeros((pad, self.answer_dim), np.float32),
             "valid": np.zeros((pad,), bool),
             "aid": np.full((pad,), -1, np.int32),
@@ -392,11 +550,28 @@ class SemanticCache:
         memcpy — the live mirror is untouched)."""
         sh = self._shadow
         s, k = sh["filled"], len(vectors)
-        if self.shard is not None:
+        if self.backend == "pallas_q8":
+            codes, scales, err = quantize_rows(
+                np.asarray(vectors, np.float32).reshape(k, self.dim),
+                width=_lane_pad(self.dim))
+            if len(err):
+                sh["err_max"] = max(sh["err_max"], float(err.max()))
+            if self.shard is not None:
+                rows = np.arange(s, s + k)
+                S = self.shard.n_shards
+                sd, l = rows % S, rows // S
+                sh["codes"][sd, l] = codes
+                sh["scales"][sd, l] = scales
+                sh["valid"][sd, l] = True
+            else:
+                sh["codes"][s:s + k] = codes
+                sh["scales"][s:s + k] = scales
+                sh["valid"][s:s + k] = True
+        elif self.shard is not None:
             self._shadow_scatter(np.arange(s, s + k), vectors, answers,
                                  answer_id)
         else:
-            sh["mat"][s:s + k] = vectors
+            sh["mat"][s:s + k, :self.dim] = vectors
             sh["ans"][s:s + k] = answers
             sh["aid"][s:s + k] = answer_id
             sh["valid"][s:s + k] = True
@@ -421,14 +596,16 @@ class SemanticCache:
         self._trim_spill()
         nc, ns = len(store), len(self.spill)
         need = nc + ns
-        if self.shard is not None:
+        if self.backend == "pallas_q8":
+            self._commit_shadow_q8(nc, ns, need)
+        elif self.shard is not None:
             self._commit_shadow_sharded(nc, ns, need)
         else:
             mat, ans, valid, aid = (sh["mat"], sh["ans"], sh["valid"],
                                     sh["aid"])
             if need > len(mat):  # spill grew past the headroom: regrow
                 pad = _pow2_pad(need)
-                mat2 = np.zeros((pad, self.dim), np.float32)
+                mat2 = np.zeros((pad, self._mat_width), np.float32)
                 ans2 = np.zeros((pad, self.answer_dim), np.float32)
                 valid2 = np.zeros((pad,), bool)
                 aid2 = np.full((pad,), -1, np.int32)
@@ -436,7 +613,7 @@ class SemanticCache:
                 valid2[:nc], aid2[:nc] = valid[:nc], aid[:nc]
                 mat, ans, valid, aid = mat2, ans2, valid2, aid2
             if ns:
-                mat[nc:need] = self.spill.vectors
+                mat[nc:need, :self.dim] = self.spill.vectors
                 ans[nc:need] = self.spill.answers
                 aid[nc:need] = self.spill.answer_id
                 valid[nc:need] = True
@@ -446,6 +623,7 @@ class SemanticCache:
         self._hnsw = None        # graph path stays rebuild-based
         self._shadow = None
         self._restore_pending = False   # a real new state supersedes restore
+        self._quant_restore = None
         self.generation += 1
         self.dev_swaps += 1
 
@@ -470,6 +648,58 @@ class SemanticCache:
             self.shard.make_mesh(), S, sh["mat"], sh["ans"], sh["valid"],
             sh["aid"], backend=self.backend)
 
+    def _commit_shadow_q8(self, nc: int, ns: int, need: int) -> None:
+        """Quant tail of :meth:`commit_shadow`: quantize the surviving
+        spill rows into the staged codes/scales, regrow if the spill
+        outgrew the headroom, then the same one-upload atomic swap."""
+        sh = self._shadow
+        dpad = _lane_pad(self.dim)
+        if self.shard is not None:
+            S = self.shard.n_shards
+            floor = max(self.shard.pad_floor, 128)
+            if shard_pad(need, S, floor) > sh["codes"].shape[1]:
+                pad = shard_pad(need, S, floor)
+                old = sh["codes"].shape[1]
+                for key, fill in (("codes", 0), ("scales", 0.0),
+                                  ("valid", False)):
+                    grown = np.full((S, pad) + sh[key].shape[2:], fill,
+                                    sh[key].dtype)
+                    grown[:, :old] = sh[key]
+                    sh[key] = grown
+            if ns:
+                codes, scales, err = quantize_rows(self.spill.vectors,
+                                                   width=dpad)
+                if len(err):
+                    sh["err_max"] = max(sh["err_max"], float(err.max()))
+                rows = np.arange(nc, need)
+                sd, l = rows % S, rows // S
+                sh["codes"][sd, l] = codes
+                sh["scales"][sd, l] = scales
+                sh["valid"][sd, l] = True
+            self._dev = ShardedQuantState.from_shard_layout(
+                self.shard.make_mesh(), S, sh["codes"], sh["scales"],
+                sh["valid"], err_max=sh["err_max"])
+            return
+        codes, scales, valid = sh["codes"], sh["scales"], sh["valid"]
+        if need > len(codes):   # spill grew past the headroom: regrow
+            pad = _pow2_pad(need)
+            codes2 = np.zeros((pad, dpad), np.int8)
+            scales2 = np.zeros((pad,), np.float32)
+            valid2 = np.zeros((pad,), bool)
+            codes2[:nc], scales2[:nc] = codes[:nc], scales[:nc]
+            valid2[:nc] = valid[:nc]
+            codes, scales, valid = codes2, scales2, valid2
+        if ns:
+            sc, ss, err = quantize_rows(self.spill.vectors, width=dpad)
+            if len(err):
+                sh["err_max"] = max(sh["err_max"], float(err.max()))
+            codes[nc:need], scales[nc:need] = sc, ss
+            valid[nc:need] = True
+        self._dev = _QuantDeviceState(jnp.asarray(codes),
+                                      jnp.asarray(scales),
+                                      jnp.asarray(valid), len(codes), dpad,
+                                      sh["err_max"])
+
     # ---------------------------------------------------------------- lookup
 
     def lookup(self, queries: np.ndarray, theta_r: float,
@@ -490,6 +720,16 @@ class SemanticCache:
         if self.backend == "hnsw":
             sims, idx = self._hnsw_lookup(queries)
             hit = sims >= theta_r
+            answer, answer_id = self._host_gather(hit, idx, nc, B)
+        elif self.backend == "pallas_q8":
+            # int8 plane (DESIGN.md §15): fused dequant-cosine top-C on
+            # device, exact margin rescore host-driven; answers are host
+            # resident — the same vectorized gather the hnsw path uses
+            sims, idx = self._quant_lookup(queries, theta_r)
+            # f32-exact compare: the device reference compares f32 sims
+            # against f32(theta), so the host must too (a float64 theta
+            # can sit strictly between a sim and its f32 rounding)
+            hit = sims >= np.float32(theta_r)
             answer, answer_id = self._host_gather(hit, idx, nc, B)
         elif self.shard is not None:
             # mesh plane: shard-local fused top-1 + cross-shard argmax
@@ -542,9 +782,114 @@ class SemanticCache:
         return LookupResult(hit, sims.astype(np.float32), answer, answer_id,
                             entry, region, generation=self.generation)
 
+    def _quant_lookup(self, queries: np.ndarray, theta_r: float
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Quantized top-1 with exact rescoring (DESIGN.md §15).
+
+        Device pass: fused int8 dequant-cosine top-C (C = rescore_k) per
+        query — shard-local + slim (sim, host_row) all-gather when
+        sharded. Host pass: margin-coverage check, then one f32 matmul
+        over the union of candidate rows reproduces the reference
+        similarities bit for bit (see _rescore_mm). Returns ((B,) exact
+        best sims f32, (B,) best rows int64) with reference (first-max)
+        tie-breaking, element-wise identical to the dense f32 backend.
+        """
+        dev = self._device_state()
+        if isinstance(dev, ShardedQuantState):
+            C = min(self.rescore_k, dev.pad)
+            s3, r3 = dev.candidates(queries, C)       # (B, S, C) np
+            cand_s = s3.reshape(len(queries), -1)
+            cand_r = r3.reshape(len(queries), -1)
+            kth = s3[:, :, -1]                        # per-shard C-th sim
+        else:
+            from repro.kernels.cosine_topk import ops as ctk_ops
+            C = min(self.rescore_k, dev.rows)
+            s, i = ctk_ops.cosine_topk_q8(
+                jnp.asarray(queries), dev.codes, dev.scales, k=C,
+                valid=dev.valid, theta=theta_r, early_exit=False)
+            cand_s, cand_r = (np.array(x) for x in jax.device_get((s, i)))
+            kth = cand_s[:, -1:]
+        return self._rescore_exact(queries, cand_s, cand_r, kth,
+                                   dev.err_max)
+
+    def _rescore_exact(self, queries: np.ndarray, cand_s: np.ndarray,
+                       cand_r: np.ndarray, kth: np.ndarray,
+                       err_max: float) -> tuple[np.ndarray, np.ndarray]:
+        """Exact top-1 from quantized candidates (proof in DESIGN.md §15).
+
+        Per query, quant sims deviate from the exact f32 sims by at most
+        eps = err_max * ||q||_2 (+ slack for f32 accumulation). If the
+        C-th candidate sim sits strictly below (max candidate - 2*eps),
+        every row tied at the true best must already be a candidate and
+        every non-candidate row is strictly below it — so one f32 rescore
+        over the candidate-row union, argmax with first-max (lowest-row)
+        tie-breaking, IS the reference answer. Queries whose margin
+        window isn't covered (rare: near-ties deeper than C) fall back to
+        the dense f32 reference, which is exact by construction.
+        """
+        B = len(queries)
+        qn = np.linalg.norm(queries.astype(np.float64), axis=1)
+        eps = err_max * qn + QUANT_SLACK                     # (B,)
+        finite = np.isfinite(cand_s)
+        m = np.max(np.where(finite, cand_s, -np.inf), axis=1,
+                   initial=-np.inf)
+        # covered: per (query, shard-window) either the window was
+        # exhausted (C-th is -inf) or its C-th quant sim is strictly
+        # below the safe bar — no candidate can be missing
+        bar = (m - 2.0 * eps)[:, None]
+        covered = ((~np.isfinite(kth)) | (kth < bar)).all(axis=1)
+        if not covered.all():
+            self.quant_fallbacks += 1
+            return self._dense_reference_lookup(queries)
+        rows = np.unique(cand_r[finite].astype(np.int64))    # sorted asc
+        if not len(rows):                                    # B == 0
+            return (np.full(B, -1.0, np.float32),
+                    np.zeros(B, np.int64))
+        self.quant_rescored += int(len(rows))
+        nc = len(self.centroids)
+        n = nc + len(self.spill)
+        # Scatter the fetched rows at their original positions inside a
+        # zero matrix of the REFERENCE shape (_pow2_pad(n) rows — the
+        # dense mirror's padding rule). XLA CPU's contraction blocking
+        # (and hence the f32 reduction order) depends on the operand
+        # shape: a compacted (U, D) submatrix can differ from the full
+        # matmul in the last ulp on some hosts. Same shape + same row
+        # position == the reference computation with non-candidate rows
+        # zeroed, bit for bit.
+        vecs = np.zeros((_pow2_pad(n), self.dim), np.float32)
+        c_rows = rows < nc
+        if c_rows.any():
+            vecs[rows[c_rows]] = self.centroids.vectors[rows[c_rows]]
+        if (~c_rows).any():
+            vecs[rows[~c_rows]] = self.spill.vectors[rows[~c_rows] - nc]
+        sims = np.asarray(_rescore_mm(jnp.asarray(queries),
+                                      jnp.asarray(vecs)))[:, rows]  # (B, U)
+        pos = np.argmax(sims, axis=1)        # first max -> lowest row
+        best = sims[np.arange(B), pos]
+        return best.astype(np.float32), rows[pos]
+
+    def _dense_reference_lookup(self, queries: np.ndarray
+                                ) -> tuple[np.ndarray, np.ndarray]:
+        """Margin-coverage fallback: materialize the full f32 row set and
+        run the reference contraction on device — bitwise the dense
+        backend's answer, at dense-backend cost (counted, rare)."""
+        nc = len(self.centroids)
+        n = nc + len(self.spill)
+        # reference shape (see _rescore_exact): pad rows are zero and
+        # excluded from the argmax by the [:, :n] slice
+        vecs = np.zeros((_pow2_pad(n), self.dim), np.float32)
+        vecs[:nc] = self.centroids.vectors
+        if len(self.spill):
+            vecs[nc:n] = self.spill.vectors
+        sims = np.asarray(_rescore_mm(jnp.asarray(queries),
+                                      jnp.asarray(vecs)))[:, :n]
+        pos = np.argmax(sims, axis=1)
+        best = sims[np.arange(len(queries)), pos]
+        return best.astype(np.float32), pos.astype(np.int64)
+
     def _host_gather(self, hit: np.ndarray, idx: np.ndarray, nc: int,
                      B: int) -> tuple[np.ndarray, np.ndarray]:
-        """Vectorized host-side answer gather (hnsw backend only)."""
+        """Vectorized host-side answer gather (hnsw + quant backends)."""
         answer = np.zeros((B, self.answer_dim), np.float32)
         answer_id = np.full(B, -1, np.int64)
         hc = hit & (idx < nc)
@@ -601,6 +946,7 @@ class SemanticCache:
         if not self.spill_lru or self.spill_capacity == 0:
             return
         nc = len(self.centroids)
+        self._quant_restore = None   # snapshot codes no longer match
         self._spill_clock += 1
         if len(self.spill) >= self.spill_capacity:
             if self.fair_share_eviction and self.tenant_of is not None:
@@ -667,15 +1013,54 @@ class SemanticCache:
                     "rows": np.asarray(self._dev.rows),
                     "pad": np.asarray(self._dev.pad)}
         n = len(self.centroids) + len(self.spill)
-        pad = (shard_pad(n, S, self.shard.pad_floor) if self.shard is not None
+        floor = (max(self.shard.pad_floor, 128)
+                 if self.shard is not None and self.backend == "pallas_q8"
+                 else self.shard.pad_floor if self.shard is not None else 0)
+        pad = (shard_pad(n, S, floor) if self.shard is not None
                else _pow2_pad(n))
         return {"n_shards": np.asarray(S), "rows": np.asarray(pad * S),
                 "pad": np.asarray(pad)}
 
+    def memory_bytes(self) -> dict:
+        """Bytes-level accounting of the device mirror (gateway.report
+        surfaces this so capacity-per-byte is observable, DESIGN.md §15).
+        Codes vs scales are split out for the quant plane; per-shard
+        numbers divide the (uniformly sharded) device totals."""
+        S = self.shard.n_shards if self.shard is not None else 1
+        out = {"backend": self.backend, "n_shards": S,
+               "mirror_live": self._dev is not None,
+               "rows": len(self.centroids) + len(self.spill),
+               "centroid_bytes": 0, "answer_bytes": 0,
+               "codes_bytes": 0, "scales_bytes": 0, "meta_bytes": 0}
+        dev = self._dev
+        if dev is not None:
+            if isinstance(dev, (_QuantDeviceState, ShardedQuantState)):
+                out["codes_bytes"] = int(dev.codes.nbytes)
+                out["scales_bytes"] = int(dev.scales.nbytes)
+                out["centroid_bytes"] = (out["codes_bytes"]
+                                         + out["scales_bytes"])
+                out["meta_bytes"] = int(dev.valid.nbytes)
+            else:
+                out["centroid_bytes"] = int(dev.mat.nbytes)
+                out["answer_bytes"] = int(dev.ans.nbytes)
+                out["meta_bytes"] = int(dev.valid.nbytes
+                                        + dev.aid.nbytes)
+        out["device_total_bytes"] = (out["centroid_bytes"]
+                                     + out["answer_bytes"]
+                                     + out["meta_bytes"])
+        out["per_shard_bytes"] = out["device_total_bytes"] // S
+        out["host_store_bytes"] = int(
+            self.centroids.vectors.nbytes + self.centroids.answers.nbytes
+            + self.spill.vectors.nbytes + self.spill.answers.nbytes)
+        return out
+
     def state_dict(self) -> dict:
         """Full snapshot: every piece of live state a warm restart needs
         to serve element-wise identical lookups (DESIGN.md §12)."""
-        return {"centroids": self.centroids.state_dict(),
+        st = self._quant_state_entries() \
+            if self.backend == "pallas_q8" else {}
+        return {**st,
+                "centroids": self.centroids.state_dict(),
                 "spill": self.spill.state_dict(),
                 "spill_last_use": self._spill_last_use,
                 "spill_clock": np.asarray(self._spill_clock),
@@ -692,7 +1077,27 @@ class SemanticCache:
                 "dev_rebuilds": np.asarray(self.dev_rebuilds),
                 "dev_row_writes": np.asarray(self.dev_row_writes),
                 "dev_swaps": np.asarray(self.dev_swaps),
+                "quant_rescored": np.asarray(self.quant_rescored),
+                "quant_fallbacks": np.asarray(self.quant_fallbacks),
                 "layout": self.layout_dict()}
+
+    def _quant_state_entries(self) -> dict:
+        """Snapshot of the int8 plane (DESIGN.md §15): codes + scales for
+        the full [centroids; spill] row set, so a warm restart serves
+        from the *same* quantized plane without requantizing. Derived by
+        requantizing the host rows (bit-deterministic — identical to the
+        live codes, which came from the same function on the same rows);
+        err_max keeps the live mirror's running max so restored margins
+        are never narrower than the dead process's."""
+        vecs = np.concatenate([self.centroids.vectors, self.spill.vectors]) \
+            if len(self.spill) else self.centroids.vectors
+        codes, scales, err = quantize_rows(
+            vecs.reshape(len(vecs), self.dim), width=_lane_pad(self.dim))
+        err_max = float(err.max()) if len(err) else 0.0
+        if self._dev is not None:
+            err_max = max(err_max, float(self._dev.err_max))
+        return {"quant": {"codes": codes, "scales": scales,
+                          "err_max": np.asarray(err_max)}}
 
     def state_delta(self) -> dict:
         """Delta snapshot: everything that mutates *between* refresh
@@ -714,7 +1119,9 @@ class SemanticCache:
                 "generation": np.asarray(self.generation),
                 "dev_rebuilds": np.asarray(self.dev_rebuilds),
                 "dev_row_writes": np.asarray(self.dev_row_writes),
-                "dev_swaps": np.asarray(self.dev_swaps)}
+                "dev_swaps": np.asarray(self.dev_swaps),
+                "quant_rescored": np.asarray(self.quant_rescored),
+                "quant_fallbacks": np.asarray(self.quant_fallbacks)}
 
     def _load_common(self, state: dict) -> None:
         # np.array (copy): in-process restores must not alias the donor's
@@ -728,6 +1135,10 @@ class SemanticCache:
         self.dev_row_writes = int(state.get("dev_row_writes",
                                             self.dev_row_writes))
         self.dev_swaps = int(state.get("dev_swaps", self.dev_swaps))
+        self.quant_rescored = int(state.get("quant_rescored",
+                                            self.quant_rescored))
+        self.quant_fallbacks = int(state.get("quant_fallbacks",
+                                             self.quant_fallbacks))
 
     def load_state(self, state: dict) -> None:
         cent = CentroidStore.from_state(state["centroids"])
@@ -737,6 +1148,7 @@ class SemanticCache:
         self.centroids = cent
         self.spill = CentroidStore.from_state(state["spill"])
         self._load_common(state)
+        self._quant_restore = state.get("quant")
         self._restore_pending = bool(state.get("mirror_live",
                                                "generation" in state))
         self._invalidate()
@@ -754,6 +1166,9 @@ class SemanticCache:
         self.centroids.access_count = access
         self.spill = CentroidStore.from_state(state["spill"])
         self._load_common(state)
+        # the delta's spill supersedes any stashed full-snapshot codes;
+        # the rebuild requantizes (bit-deterministic, so still identical)
+        self._quant_restore = None
         self._restore_pending = bool(state.get("mirror_live", True))
         self._invalidate()
 

@@ -36,6 +36,12 @@ class SISOConfig:
     dynamic_threshold: bool = True
     backend: str = "dense"
     spill_lru: bool = True
+    rescore_k: int = 16              # quant plane (backend "pallas_q8",
+                                     # DESIGN.md §15): top-C candidates
+                                     # per query for the exact margin
+                                     # rescore; larger C lowers the dense
+                                     # fallback rate, never changes
+                                     # results
     repeat_sim: float = 0.99         # same-user repeat detection
     repeat_window: float = 60.0      # seconds
     t2h_sample_frac: float = 0.05    # paper: 5% of fresh queries
@@ -72,7 +78,8 @@ class SISO:
         self.cache = SemanticCache(cfg.dim, cfg.answer_dim, cfg.capacity,
                                    backend=cfg.backend,
                                    spill_lru=cfg.spill_lru,
-                                   shard=cfg.shard)
+                                   shard=cfg.shard,
+                                   rescore_k=cfg.rescore_k)
         if cfg.tiered is not None:     # device→host→disk (DESIGN.md §13)
             self.cache = TieredCache(self.cache, cfg.tiered)
         self.manager = CacheManager(theta_c=cfg.theta_c)

@@ -518,6 +518,32 @@ class TieredCache:
         # should be collected for demotion (None in a 1-tier config)
         return self.device.evict_sink
 
+    @property
+    def quant_rescored(self):
+        return self.device.quant_rescored
+
+    @property
+    def quant_fallbacks(self):
+        return self.device.quant_fallbacks
+
+    def memory_bytes(self) -> dict:
+        """Bytes-level accounting across the hierarchy (DESIGN.md §15):
+        the device tier's mirror breakdown plus per-lower-tier
+        centroid/answer bytes, so gateway.report() exposes where every
+        cached byte lives."""
+        out = self.device.memory_bytes()
+        tiers = {"device": int(out["device_total_bytes"])}
+        if self.host is not None:
+            st = self.host.store
+            tiers["host"] = int(st.vectors.nbytes + st.answers.nbytes)
+        if self.disk is not None:
+            live = int(self.disk.live.sum())
+            tiers["disk"] = int(
+                self.disk.vectors.nbytes
+                + live * self.disk.answer_dim * 4)   # flushed f32 answers
+        out["tier_bytes"] = tiers
+        return out
+
     def set_centroids(self, store: CentroidStore) -> None:
         # drop spill staging rows whose identity the new centroid region
         # now carries — one copy per identity across the whole hierarchy

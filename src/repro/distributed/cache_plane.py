@@ -116,7 +116,9 @@ def _plane_fns(mesh: Mesh, n_shards: int, backend: str):
             best = jnp.take_along_axis(sims, l[:, None], axis=1)[:, 0]
         me = jax.lax.axis_index("cache").astype(jnp.int32)
         host_row = l.astype(jnp.int32) * S + me      # globalize (round-robin)
-        return cross_shard_top1(best, host_row, ans[l], aid[l], theta)
+        # slim merge: only (sim, host_row) cross the wire; the full local
+        # ans/aid blocks stay put and the winner's row is psum-fetched
+        return cross_shard_top1(best, host_row, ans, aid, theta)
 
     def write_kern(mat, ans, valid, aid, row, vec, answer, answer_id):
         # owner-shard routed in-place row patch: every shard traces the
@@ -247,4 +249,147 @@ class ShardedDeviceState:
         per_row = (self.mat.dtype.itemsize * self.mat.shape[1]
                    + self.ans.dtype.itemsize * self.ans.shape[1]
                    + self.valid.dtype.itemsize + self.aid.dtype.itemsize)
+        return self.pad * per_row
+
+
+@functools.lru_cache(maxsize=None)
+def _quant_plane_fns(mesh: Mesh, n_shards: int, k: int):
+    """Compiled (candidates, write_plain, write_donated) for the int8
+    plane (DESIGN.md §15). The candidate kernel runs the fused
+    dequant-cosine top-k shard-locally, then all-gathers only the
+    (sim, host_row) candidate lists — 2 * B * S * k scalars; no answer
+    payload ever rides the collective (answers are host-resident for the
+    quant plane)."""
+    S = n_shards
+
+    def cand_kern(q, codes, scales, valid):
+        from repro.kernels.cosine_topk.ops import cosine_topk_q8
+        s, i = cosine_topk_q8(q, codes, scales, k=k, valid=valid,
+                              early_exit=False)
+        me = jax.lax.axis_index("cache").astype(jnp.int32)
+        gr = jnp.where(i >= 0, i * S + me, -1)       # globalize; keep -1
+        sg = jax.lax.all_gather(s, "cache", axis=1)  # (B, S, k)
+        rg = jax.lax.all_gather(gr, "cache", axis=1)
+        return sg, rg
+
+    def write_kern(codes, scales, valid, row, crow, scale):
+        me = jax.lax.axis_index("cache").astype(jnp.int32)
+        mine = (row % S) == me
+        l = row // S
+        codes2 = jax.lax.dynamic_update_slice(codes, crow[None, :], (l, 0))
+        scales2 = scales.at[l].set(scale)
+        valid2 = valid.at[l].set(True)
+        keep = lambda new, old: jnp.where(mine, new, old)
+        return (keep(codes2, codes), keep(scales2, scales),
+                keep(valid2, valid))
+
+    row_specs = (P("cache", None), P("cache"), P("cache"))
+    look = jax.jit(shard_map(cand_kern, mesh=mesh,
+                             in_specs=(P(), *row_specs),
+                             out_specs=(P(), P())))
+    write_sm = shard_map(write_kern, mesh=mesh,
+                         in_specs=(*row_specs, P(), P(), P()),
+                         out_specs=row_specs)
+    return look, jax.jit(write_sm), jax.jit(write_sm,
+                                            donate_argnums=(0, 1, 2))
+
+
+@dataclass
+class ShardedQuantState:
+    """Mesh-sharded int8 mirror (backend "pallas_q8", DESIGN.md §15).
+
+    Same round-robin owner mapping as ``ShardedDeviceState`` but holding
+    codes + per-row scales only — no device answer matrix (answers are
+    gathered host-side from the winning row), which is most of the >=2x
+    capacity-per-device-byte. Lookup returns top-C *candidates* per
+    (query, shard) instead of a final argmax: the exact margin rescore
+    happens in SemanticCache, shared with the 1-device quant path.
+    """
+    codes: jax.Array    # (S*pad, dpad) int8, row-sharded over "cache"
+    scales: jax.Array   # (S*pad,) float32
+    valid: jax.Array    # (S*pad,) bool
+    pad: int            # rows per shard
+    n_shards: int
+    mesh: Mesh
+    err_max: float      # running max per-row dequant L2 error
+
+    @property
+    def rows(self) -> int:
+        return self.pad * self.n_shards
+
+    @property
+    def dpad(self) -> int:
+        return self.codes.shape[1]
+
+    @classmethod
+    def from_shard_layout(cls, mesh: Mesh, n_shards: int,
+                          codes: np.ndarray, scales: np.ndarray,
+                          valid: np.ndarray, err_max: float
+                          ) -> "ShardedQuantState":
+        """Upload host staging already in (S, pad, ...) owner layout —
+        one transfer per array, placed shard-local by NamedSharding."""
+        S, pad = codes.shape[0], codes.shape[1]
+        rows2 = NamedSharding(mesh, P("cache", None))
+        rows1 = NamedSharding(mesh, P("cache"))
+        return cls(
+            codes=jax.device_put(codes.reshape(S * pad, -1), rows2),
+            scales=jax.device_put(scales.reshape(S * pad), rows1),
+            valid=jax.device_put(valid.reshape(S * pad), rows1),
+            pad=pad, n_shards=S, mesh=mesh, err_max=float(err_max))
+
+    @classmethod
+    def build(cls, mesh: Mesh, n_shards: int, codes: np.ndarray,
+              scales: np.ndarray, err_max: float,
+              pad_floor: int = 128) -> "ShardedQuantState":
+        """Scatter quantized host rows (host-row order) into the owner
+        layout and upload. The pad floor is >= 128 so each shard block is
+        already kernel-tile shaped (no per-call padding in the lookup)."""
+        n, dpad = codes.shape
+        pad = shard_pad(n, n_shards, pad_floor)
+        cp = np.zeros((n_shards, pad, dpad), np.int8)
+        sp = np.zeros((n_shards, pad), np.float32)
+        valid = np.zeros((n_shards, pad), bool)
+        if n:
+            rows = np.arange(n)
+            s, l = rows % n_shards, rows // n_shards
+            cp[s, l] = codes
+            sp[s, l] = scales
+            valid[s, l] = True
+        return cls.from_shard_layout(mesh, n_shards, cp, sp, valid,
+                                     err_max)
+
+    def candidates(self, queries: np.ndarray, k: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Quant top-k candidates per (query, shard): ((B, S, k) sims
+        f32, (B, S, k) host rows i32, -1 for exhausted slots)."""
+        look, _, _ = _quant_plane_fns(self.mesh, self.n_shards, k)
+        s, r = look(jnp.asarray(queries), self.codes, self.scales,
+                    self.valid)
+        s, r = jax.device_get((s, r))
+        return np.array(s), np.array(r)
+
+    def write_row(self, row: int, vec: np.ndarray, answer: np.ndarray,
+                  answer_id: int) -> None:
+        """Owner-shard routed in-place code-row + scale patch. The
+        answer/answer_id stay host-side (ignored here), same contract as
+        the single-device quant mirror."""
+        from repro.kernels.cosine_topk.ops import quantize_rows
+        crow, scale, err = quantize_rows(
+            np.asarray(vec, np.float32).reshape(1, -1), width=self.dpad)
+        _, plain, donated = _quant_plane_fns(self.mesh, self.n_shards, 1)
+        fn = plain if jax.default_backend() == "cpu" else donated
+        self.codes, self.scales, self.valid = fn(
+            self.codes, self.scales, self.valid, jnp.int32(row),
+            jnp.array(crow[0]), jnp.float32(scale[0]))
+        self.err_max = max(self.err_max, float(err[0]))
+
+    def layout_dict(self) -> dict:
+        return {"n_shards": np.asarray(self.n_shards),
+                "rows": np.asarray(self.rows),
+                "pad": np.asarray(self.pad)}
+
+    def nbytes_per_shard(self) -> int:
+        per_row = (self.codes.dtype.itemsize * self.codes.shape[1]
+                   + self.scales.dtype.itemsize
+                   + self.valid.dtype.itemsize)
         return self.pad * per_row

@@ -5,9 +5,11 @@
   k candidates per query cross the wire (all-gather of O(B*k*mesh) scalars
   instead of the full (B, N) score matrix), followed by a local merge.
 * ``cross_shard_top1`` — the sharded cache plane's merge step (DESIGN.md
-  §11): each shard contributes its local best (sim, host row, answer);
-  only O(B * mesh) candidates cross the wire and the winner is selected
-  with the exact single-device tie-break (max sim, then lowest host row).
+  §11/§15): each shard contributes only its local best (sim, host row);
+  the winner is selected with the exact single-device tie-break (max sim,
+  then lowest host row) and the answer is then fetched from the winning
+  shard with one psum — O(B * mesh) candidate scalars plus O(B * A)
+  answer bytes, instead of gathering every shard's answer payload.
 * ``ring_allreduce_schedule`` — an explicit reduce-scatter + all-gather
   decomposition via collective_permute, for overlap experiments where XLA's
   fused all-reduce is replaced by a schedulable ring.
@@ -71,29 +73,38 @@ def cross_shard_top1(best: jax.Array, host_row: jax.Array,
     """Cross-shard argmax reduction for the sharded cache lookup
     (DESIGN.md §11). Runs inside shard_map over ``axis``.
 
-    Each shard passes its local top-1 candidate per query: ``best`` (B,)
-    similarity, ``host_row`` (B,) int32 globalized row, ``answer``
-    (B, answer_dim) and ``answer_id`` (B,) gathered from the local best
-    row. Only these O(B * world) scalars cross the wire. The winner per
-    query is chosen lexicographically — highest sim, then lowest host
-    row — which is exactly the single-device ``jnp.argmax`` tie-break
-    over the concatenated host-row order, so sharded results are
-    element-wise identical to the 1-device reference. Returns replicated
-    (hit, best_sim, winning host row, answer, answer_id) with the fused
-    theta compare + answer gather applied (zeros / -1 on miss).
+    Slim merge: each shard contributes only its (sim, host_row) top-1
+    candidate per query — 2 * B * world scalars over the wire — and the
+    winner is selected lexicographically (highest sim, then lowest host
+    row), which is exactly the single-device ``jnp.argmax`` tie-break
+    over the concatenated host-row order. The answer payload does NOT
+    ride the all-gather: ``answer`` (pad, A) / ``answer_id`` (pad,) are
+    the shard's *full local blocks*, and once the winning host row is
+    known, only the owner shard contributes its row to one (B, A) psum —
+    O(B * A) instead of the old O(B * world * A) gathered payload.
+    Returns replicated (hit, best_sim, winning host row, answer,
+    answer_id) with the fused theta compare + answer gather applied
+    (zeros / -1 on miss).
     """
+    from repro.compat import axis_size
+    world = axis_size(axis)
     bg = jax.lax.all_gather(best, axis, axis=1)          # (B, world)
     rg = jax.lax.all_gather(host_row, axis, axis=1)      # (B, world)
-    ag = jax.lax.all_gather(answer, axis, axis=1)        # (B, world, A)
-    ig = jax.lax.all_gather(answer_id, axis, axis=1)     # (B, world)
     m = jnp.max(bg, axis=1)
     # shards tied at the max compete on host row; losers get +inf rows
     key = jnp.where(bg == m[:, None], rg, jnp.iinfo(jnp.int32).max)
     win = jnp.argmin(key, axis=1)
     row_win = jnp.take_along_axis(rg, win[:, None], axis=1)[:, 0]
+    # winner-owner answer fetch: every shard traces the gather, only the
+    # owner's contribution is nonzero, the psum moves it to all shards
+    me = jax.lax.axis_index(axis).astype(row_win.dtype)
+    mine = (row_win % world) == me
+    l = row_win // world                                  # local row
+    ans_win = jax.lax.psum(
+        jnp.where(mine[:, None], answer[l], 0.0), axis)
+    aid_win = jax.lax.psum(
+        jnp.where(mine, answer_id[l], 0).astype(answer_id.dtype), axis)
     hit = m >= theta
-    ans_win = jnp.take_along_axis(ag, win[:, None, None], axis=1)[:, 0]
-    aid_win = jnp.take_along_axis(ig, win[:, None], axis=1)[:, 0]
     answer_out = jnp.where(hit[:, None], ans_win, 0.0)
     aid_out = jnp.where(hit, aid_win, -1)
     return hit, m, row_win, answer_out, aid_out

@@ -1,1 +1,2 @@
-from repro.kernels.cosine_topk.ops import cosine_topk  # noqa: F401
+from repro.kernels.cosine_topk.ops import (cosine_topk,  # noqa: F401
+                                           cosine_topk_q8, quantize_rows)

@@ -93,3 +93,58 @@ def cosine_topk_kernel(theta_ref, q_ref, c_ref, valid_ref, vals_ref, idx_ref,
             _compute()
     else:
         _compute()
+
+
+def cosine_topk_q8_kernel(tm_ref, q_ref, c_ref, s_ref, valid_ref, vals_ref,
+                          idx_ref, hit_ref, *, k: int, block_n: int,
+                          early_exit: bool):
+    """int8 variant of ``cosine_topk_kernel`` (DESIGN.md §15).
+
+    Centroid tiles stream HBM -> VMEM as int8 codes (quarter the f32
+    bandwidth/footprint) with per-row symmetric scales ``s_ref`` (1, Ct);
+    dequant is fused into the tile compute — the same widen-then-scale
+    pattern as the int8-KV path in kernels/decode_attention. The scale is
+    applied *after* the (B, D) x (D, Ct) accumulation (one multiply per
+    output element instead of per input element), so the quantized
+    similarity is ``(q . codes_j) * scale_j`` exactly.
+
+    ``tm_ref`` prefetches [theta, margin]: the hit mask (and early exit)
+    compares against ``theta + margin`` so a kernel-reported hit is
+    *conservative* — quantization error can never turn a true reject into
+    an accept. Candidates inside the margin are exactly rescored by the
+    caller against full-precision rows (see SemanticCache._rescore_exact).
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        vals_ref[...] = jnp.full(vals_ref.shape, NEG, jnp.float32)
+        idx_ref[...] = jnp.full(idx_ref.shape, -1, jnp.int32)
+        hit_ref[...] = jnp.zeros(hit_ref.shape, jnp.int32)
+
+    thr = tm_ref[0] + tm_ref[1]
+
+    def _compute():
+        q = q_ref[...]
+        c = c_ref[...].astype(jnp.float32)                   # dequant widen
+        sims = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (B, Ct)
+        sims = sims * s_ref[...]                             # per-row scale
+        v = valid_ref[...]                                   # (1, Ct)
+        sims = jnp.where(v != 0, sims, NEG)
+        base = t * block_n
+        gcol = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1) + base
+        rv, ri = _merge_topk(vals_ref[...], idx_ref[...], sims, gcol, k)
+        vals_ref[...] = rv
+        idx_ref[...] = ri
+        hit_ref[...] = (rv[:, :1] >= thr).astype(jnp.int32)
+
+    if early_exit:
+        done = jnp.logical_and(t > 0, jnp.min(vals_ref[:, 0]) >= thr)
+
+        @pl.when(jnp.logical_not(done))
+        def _():
+            _compute()
+    else:
+        _compute()

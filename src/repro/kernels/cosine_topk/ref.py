@@ -18,3 +18,20 @@ def cosine_topk_ref(queries: jax.Array, centroids: jax.Array, k: int = 1,
     vals, idx = jax.lax.top_k(sims, k)
     idx = jnp.where(jnp.isfinite(vals), idx, -1)
     return vals, idx.astype(jnp.int32)
+
+
+def cosine_topk_q8_ref(queries: jax.Array, codes: jax.Array,
+                       scales: jax.Array, k: int = 1,
+                       valid: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the int8 kernel: sim_j = (q . codes_j) * scale_j, with
+    the scale applied after the reduction (matching the fused kernel)."""
+    sims = jnp.einsum("bd,nd->bn", queries.astype(jnp.float32),
+                      codes.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    sims = sims * scales.astype(jnp.float32)[None, :]
+    if valid is not None:
+        sims = jnp.where(valid[None, :] != 0, sims, -jnp.inf)
+    vals, idx = jax.lax.top_k(sims, k)
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals, idx.astype(jnp.int32)

@@ -530,6 +530,14 @@ class ServingGateway:
                 dev = cache._dev
                 if dev is not None:
                     rep["cache_rows_per_shard"] = dev.pad
+        if cache is not None and hasattr(cache, "memory_bytes"):
+            # bytes-level accounting (DESIGN.md §15): per-shard and
+            # per-tier centroid/answer bytes, codes vs scales split —
+            # capacity-per-byte is observable, not inferred
+            rep["memory"] = cache.memory_bytes()
+        if cache is not None and getattr(cache, "backend", "") == "pallas_q8":
+            rep["quant_rescored"] = cache.quant_rescored
+            rep["quant_fallbacks"] = cache.quant_fallbacks
         if cache is not None and hasattr(cache, "tier_stats"):
             # tiered hierarchy (DESIGN.md §13): per-tier hit / promotion /
             # demotion counters ride in every report

@@ -1,0 +1,341 @@
+"""Quantized cache plane (DESIGN.md §15): int8 kernel edge paths, the
+quantize_rows error bound, exactness of the margin-rescored lookup vs
+the dense f32 reference (including theta sitting exactly on a sim, the
+forced-fallback path, and interleaved spill writes), bytes accounting,
+persistence of the code plane, and forced-8-device shard parity (same
+subprocess pattern as test_sharded_cache)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.semantic_cache import SemanticCache
+from repro.core.store import CentroidStore
+from repro.kernels.cosine_topk.ops import (cosine_topk, cosine_topk_q8,
+                                           quantize_rows)
+from repro.kernels.cosine_topk.ref import cosine_topk_q8_ref
+
+from tests.test_sharded_cache import run_with_devices, _PRELUDE
+
+
+def _unit(rng, n, d):
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _fill(cache, vecs, aid0=0):
+    st = CentroidStore(cache.dim, cache.answer_dim)
+    st.add(vecs, vecs[:, :cache.answer_dim],
+           np.arange(len(vecs), 0, -1, dtype=np.float64),
+           answer_id=np.arange(len(vecs)) + aid0)
+    cache.set_centroids(st)
+
+
+def _assert_results_equal(r1, r2, ctx=""):
+    for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+        a, b = getattr(r1, f), getattr(r2, f)
+        assert np.array_equal(a, b), (ctx, f, a, b)
+
+
+# ---------------------------------------------------------------------------
+# quantize_rows: layout + the Cauchy-Schwarz error bound
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_rows_properties():
+    rng = np.random.default_rng(0)
+    rows = _unit(rng, 17, 48)
+    rows[5] = 0.0                                   # zero row edge case
+    codes, scales, err = quantize_rows(rows, width=128)
+    assert codes.shape == (17, 128) and codes.dtype == np.int8
+    assert scales.shape == (17,) and scales.dtype == np.float32
+    assert err.shape == (17,) and err.dtype == np.float64
+    assert (codes[:, 48:] == 0).all()               # lane pad is zero
+    assert scales[5] == 1.0 and (codes[5] == 0).all() and err[5] == 0.0
+    assert np.abs(codes).max() <= 127
+    # |q.row - (q.codes)*scale| <= ||q|| * err for arbitrary queries
+    q = rng.normal(size=(64, 48)).astype(np.float32)
+    exact = q.astype(np.float64) @ rows.astype(np.float64).T
+    quant = (q.astype(np.float64) @ codes[:, :48].astype(np.float64).T
+             ) * scales[None, :]
+    bound = np.linalg.norm(q.astype(np.float64), axis=1)[:, None] * err
+    assert (np.abs(exact - quant) <= bound + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# kernel edge paths, f32 AND int8
+# ---------------------------------------------------------------------------
+
+
+def test_q8_kernel_matches_oracle_topk():
+    rng = np.random.default_rng(1)
+    rows = _unit(rng, 90, 40)
+    codes, scales, _ = quantize_rows(rows)
+    q = jnp.asarray(_unit(rng, 9, 40))
+    for k in (1, 4):
+        vs, ix = cosine_topk_q8(q, jnp.asarray(codes), jnp.asarray(scales),
+                                k=k)
+        rv, ri = cosine_topk_q8_ref(q, jnp.asarray(codes),
+                                    jnp.asarray(scales), k=k)
+        np.testing.assert_array_equal(np.asarray(vs), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(ix), np.asarray(ri))
+
+
+@pytest.mark.parametrize("fn", ["f32", "q8"])
+def test_kernel_empty_batch(fn):
+    rng = np.random.default_rng(2)
+    rows = _unit(rng, 12, 16)
+    q = jnp.zeros((0, 16), jnp.float32)
+    if fn == "f32":
+        vs, ix, hit = cosine_topk(q, jnp.asarray(rows), k=3,
+                                  return_hit=True)
+    else:
+        codes, scales, _ = quantize_rows(rows)
+        vs, ix, hit = cosine_topk_q8(q, jnp.asarray(codes),
+                                     jnp.asarray(scales), k=3,
+                                     return_hit=True)
+    assert vs.shape == (0, 3) and ix.shape == (0, 3) and hit.shape == (0,)
+
+
+@pytest.mark.parametrize("fn", ["f32", "q8"])
+def test_kernel_sparse_and_empty_valid(fn):
+    rng = np.random.default_rng(3)
+    rows = _unit(rng, 40, 24)
+    q = jnp.asarray(_unit(rng, 5, 24))
+    valid = np.zeros(40, np.int32)
+    valid[[3, 17, 33]] = 1
+
+    def run(v):
+        if fn == "f32":
+            return cosine_topk(q, jnp.asarray(rows), k=2,
+                               valid=jnp.asarray(v))
+        codes, scales, _ = quantize_rows(rows)
+        return cosine_topk_q8(q, jnp.asarray(codes), jnp.asarray(scales),
+                              k=2, valid=jnp.asarray(v))
+
+    vs, ix = run(valid)
+    ix = np.asarray(ix)
+    assert set(ix.ravel()) <= {3, 17, 33}           # only valid rows
+    # empty valid mask: every slot is a -inf miss with idx -1
+    vs, ix = run(np.zeros(40, np.int32))
+    assert not np.isfinite(np.asarray(vs)).any()
+    assert (np.asarray(ix) == -1).all()
+
+
+def test_q8_prepadded_fast_path_bitwise():
+    """A kernel-shaped (rows % block, lanes % 128) resident code plane
+    must produce bit-identical results to the re-padding path."""
+    rng = np.random.default_rng(4)
+    rows = _unit(rng, 100, 32)
+    codes, scales, _ = quantize_rows(rows)
+    q = jnp.asarray(_unit(rng, 7, 32))
+    v1, i1 = cosine_topk_q8(q, jnp.asarray(codes), jnp.asarray(scales), k=3)
+    padded = np.zeros((128, 128), np.int8)
+    padded[:100, :32] = codes
+    ps = np.zeros(128, np.float32)
+    ps[:100] = scales
+    pv = np.zeros(128, np.int32)
+    pv[:100] = 1
+    v2, i2 = cosine_topk_q8(q, jnp.asarray(padded), jnp.asarray(ps), k=3,
+                            valid=jnp.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# serving equivalence: quant plane vs dense f32 reference
+# ---------------------------------------------------------------------------
+
+
+def test_quant_vs_dense_randomized_stream():
+    """Every LookupResult field and the hit/miss counters must match the
+    dense reference over a randomized stream with interleaved spill
+    writes (the donated-row code-patch path)."""
+    rng = np.random.default_rng(5)
+    D, A, n = 48, 16, 70
+    vecs = _unit(rng, n, D)
+    q8 = SemanticCache(D, A, capacity=100, backend="pallas_q8")
+    ref = SemanticCache(D, A, capacity=100, backend="dense")
+    for c in (q8, ref):
+        _fill(c, vecs)
+    for step in range(15):
+        B = int(rng.integers(1, 13))
+        q = _unit(rng, B, D)
+        if step % 2:
+            q[0] = vecs[int(rng.integers(0, n))]
+        theta = float(rng.choice([0.6, 0.9, 0.95, 0.999]))
+        _assert_results_equal(q8.lookup(q, theta), ref.lookup(q, theta),
+                              step)
+        if step % 3 == 0:
+            v = _unit(rng, 1, D)[0]
+            for c in (q8, ref):
+                c.insert_spill(v, v[:A], answer_id=1000 + step)
+    assert (q8.hits, q8.misses) == (ref.hits, ref.misses)
+    assert q8.quant_rescored > 0
+
+
+def test_theta_exactly_at_quantized_sim_boundary():
+    """theta placed exactly ON a served f32 sim must accept (>=), and one
+    ulp above must reject — on the quant plane AND the dense reference,
+    identically. This is the f32-exact theta compare: a float64 theta
+    between a sim and its f32 rounding must not flip a decision."""
+    rng = np.random.default_rng(6)
+    D, A = 32, 8
+    vecs = _unit(rng, 20, D)
+    q8 = SemanticCache(D, A, capacity=32, backend="pallas_q8")
+    ref = SemanticCache(D, A, capacity=32, backend="dense")
+    for c in (q8, ref):
+        _fill(c, vecs)
+    q = _unit(rng, 3, D)
+    probe = ref.lookup(q, -1.0, update_counts=False)   # exact f32 sims
+    for b in range(3):
+        s = np.float32(probe.sim[b])
+        for theta in (float(s),                          # ON the sim
+                      float(np.nextafter(s, np.float32(2.0)))):  # one ulp up
+            ra = q8.lookup(q, theta, update_counts=False)
+            rb = ref.lookup(q, theta, update_counts=False)
+            _assert_results_equal(ra, rb, (b, theta))
+        assert q8.lookup(q, float(s), update_counts=False).hit[b]
+        assert not q8.lookup(q, float(np.nextafter(s, np.float32(2.0))),
+                             update_counts=False).hit[b]
+
+
+def test_forced_fallback_path_still_exact():
+    """A tiny rescore budget over a corpus of near-ties overflows the
+    margin window: the dense-reference fallback must fire (counted) and
+    results stay element-wise exact."""
+    rng = np.random.default_rng(7)
+    D, A = 32, 8
+    base = _unit(rng, 1, D)[0]
+    # 60 rows inside a ~1e-3 cone around one direction: quant sims
+    # cannot separate them at rescore_k=2
+    vecs = base[None, :] + rng.normal(size=(60, D)).astype(np.float32) * 1e-4
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    q8 = SemanticCache(D, A, capacity=64, backend="pallas_q8", rescore_k=2)
+    ref = SemanticCache(D, A, capacity=64, backend="dense")
+    for c in (q8, ref):
+        _fill(c, vecs)
+    for step in range(4):
+        q = base[None, :] + rng.normal(size=(6, D)).astype(np.float32) * 1e-4
+        q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+        _assert_results_equal(q8.lookup(q, 0.9), ref.lookup(q, 0.9), step)
+    assert q8.quant_fallbacks > 0
+    assert (q8.hits, q8.misses) == (ref.hits, ref.misses)
+
+
+# ---------------------------------------------------------------------------
+# bytes accounting + gateway report
+# ---------------------------------------------------------------------------
+
+
+def test_memory_bytes_accounting():
+    rng = np.random.default_rng(8)
+    D, A, n = 64, 32, 50
+    vecs = _unit(rng, n, D)
+    q8 = SemanticCache(D, A, capacity=64, backend="pallas_q8")
+    f32 = SemanticCache(D, A, capacity=64, backend="pallas")
+    for c in (q8, f32):
+        _fill(c, vecs)
+        c.lookup(_unit(rng, 2, D), 0.9, update_counts=False)  # build mirror
+    mq, mf = q8.memory_bytes(), f32.memory_bytes()
+    assert mq["backend"] == "pallas_q8" and mq["mirror_live"]
+    assert mq["codes_bytes"] > 0 and mq["scales_bytes"] > 0
+    assert mq["answer_bytes"] == 0          # answers are host-resident
+    assert mq["centroid_bytes"] == mq["codes_bytes"] + mq["scales_bytes"]
+    assert mq["device_total_bytes"] < mf["device_total_bytes"]
+    assert mq["rows"] == mf["rows"] == n
+    assert mq["host_store_bytes"] == mf["host_store_bytes"] > 0
+    assert mq["per_shard_bytes"] == mq["device_total_bytes"]   # S == 1
+
+
+def test_gateway_report_carries_memory_and_quant_counters():
+    import types
+    from repro.core.siso import SISO, SISOConfig
+    from repro.serving.gateway import ServingGateway
+    rng = np.random.default_rng(9)
+    d = 16
+    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=64,
+                           dynamic_threshold=False, theta_r=0.9,
+                           backend="pallas_q8"))
+    hist = _unit(rng, 30, d)
+    siso.bootstrap(hist, hist, answer_ids=np.arange(30))
+    engine = types.SimpleNamespace(n_slots=2)      # hit-only: never ticked
+    gw = ServingGateway(siso, engine, embed_fn=lambda vs: np.stack(vs))
+    siso.cache.lookup(hist[:4], 0.9)               # exercise the quant path
+    rep = gw.report()
+    assert rep["memory"]["backend"] == "pallas_q8"
+    assert rep["memory"]["codes_bytes"] > 0
+    assert rep["memory"]["scales_bytes"] > 0
+    assert rep["quant_rescored"] == siso.cache.quant_rescored > 0
+    assert rep["quant_fallbacks"] == siso.cache.quant_fallbacks
+
+
+# ---------------------------------------------------------------------------
+# persistence: the code plane rides the snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_quant_persistence_roundtrip_bitwise():
+    rng = np.random.default_rng(10)
+    D, A, n = 48, 16, 40
+    vecs = _unit(rng, n, D)
+    c1 = SemanticCache(D, A, capacity=64, backend="pallas_q8")
+    _fill(c1, vecs)
+    for j in range(5):
+        v = _unit(rng, 1, D)[0]
+        c1.insert_spill(v, v[:A], answer_id=500 + j)
+    q = _unit(rng, 8, D)
+    q[0] = vecs[3]
+    r1 = c1.lookup(q, 0.9)
+    st = c1.state_dict()
+    assert "quant" in st
+    for key in ("codes", "scales", "err_max"):
+        assert key in st["quant"]
+    c2 = SemanticCache(D, A, capacity=64, backend="pallas_q8")
+    c2.load_state(st)
+    r2 = c2.lookup(q, 0.9)
+    _assert_results_equal(r1, r2, "restored")
+    # the restored device plane holds the snapshotted codes verbatim
+    d1, d2 = c1._device_state(), c2._device_state()
+    np.testing.assert_array_equal(np.asarray(d1.codes), np.asarray(d2.codes))
+    np.testing.assert_array_equal(np.asarray(d1.scales),
+                                  np.asarray(d2.scales))
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device shard parity (subprocess, like test_sharded_cache)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_quant_parity_forced_8_devices():
+    """S=2 and S=8 quant planes must serve every LookupResult field
+    identically to the 1-device dense f32 reference, with spill writes
+    interleaved (donated code-row patches on every shard)."""
+    code = _PRELUDE + """
+vecs = norm(rng.normal(size=(80, D)).astype(np.float32))
+ans = rng.normal(size=(80, A)).astype(np.float32)
+ref = SemanticCache(D, A, capacity=120, backend="dense")
+fill(ref, vecs, ans)
+for S in (2, 8):
+    sh = SemanticCache(D, A, capacity=120, backend="pallas_q8",
+                       shard=ShardedCacheConfig(n_shards=S))
+    refc = SemanticCache(D, A, capacity=120, backend="dense")
+    fill(sh, vecs, ans)
+    fill(refc, vecs, ans)
+    for step in range(12):
+        B = int(rng.integers(1, 13))
+        q = norm(rng.normal(size=(B, D)).astype(np.float32))
+        if step % 2 == 0:
+            q[0] = vecs[int(rng.integers(0, 80))]
+        theta = float(rng.uniform(0.5, 0.99))
+        assert_results_equal(refc.lookup(q, theta), sh.lookup(q, theta),
+                             (S, step))
+        if step % 3 == 1:
+            v = norm(rng.normal(size=(D,)).astype(np.float32))
+            a = rng.normal(size=(A,)).astype(np.float32)
+            for c in (sh, refc):
+                c.insert_spill(v, a, 3000 + step)
+    assert (sh.hits, sh.misses) == (refc.hits, refc.misses), S
+print("QUANT_SHARD_OK")
+"""
+    assert "QUANT_SHARD_OK" in run_with_devices(code)

@@ -50,6 +50,9 @@ METRICS = [
     ("BENCH_shard.json", "s_max_over_s1_p50",
      "lower", "factor", 3.0,
      "sharded lookup p50 overhead ratio (max shards / 1 shard)"),
+    ("BENCH_shard.json", "s_max_over_s1_p99",
+     "lower", "factor", 3.0,
+     "sharded lookup p99 tail-flatness ratio (max shards / 1 shard)"),
     ("BENCH_shard.json", "capacity[-1].rows_capacity",
      "higher", "factor", 1.0,
      "total cache rows at max shard count (deterministic)"),
@@ -99,6 +102,20 @@ METRICS = [
     ("BENCH_tenancy.json", "drill.identical",
      "true", None, None,
      "multi-tenant save/restore replay element-wise identical"),
+    ("BENCH_quant.json", "capacity_per_byte_ratio",
+     "higher", "factor", 0.9,
+     "int8 plane capacity per device byte vs the f32 plane (>= ~4x "
+     "at dim=256; the paper-level requirement is >= 2x)"),
+    ("BENCH_quant.json", "decisions_exact",
+     "true", None, None,
+     "quant-plane lookup decisions element-wise identical to the dense "
+     "f32 reference (every LookupResult field + hit/miss counters)"),
+    ("BENCH_quant.json", "shard_p99_ratio",
+     "lower", "factor", 3.0,
+     "sharded quant lookup p99 flatness (max shards / 1 shard)"),
+    ("BENCH_quant.json", "latency[-1].equal_to_reference",
+     "true", None, None,
+     "8-shard quant lookup element-wise identical to 1-device quant"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
