@@ -218,7 +218,8 @@ def run_lookup_bench(rng):
 
 def run_gateway_bench(rng, n_requests: int = 120, batch_size: int = 8):
     from repro.configs.base import get_config
-    from repro.core.siso import SISO, SISOConfig
+    from repro.core.siso import SISO
+    from repro.serving.config import CacheConfig, ServingConfig
     from repro.models import lm
     from repro.serving.engine import ModelEngine
     from repro.serving.gateway import GatewayRequest, ServingGateway
@@ -228,8 +229,9 @@ def run_gateway_bench(rng, n_requests: int = 120, batch_size: int = 8):
     engine = ModelEngine(mparams, mcfg, n_slots=4, max_len=64)
 
     d = DIM
-    siso = SISO(SISOConfig(dim=d, answer_dim=d, capacity=256,
-                           theta_r=0.9, dynamic_threshold=False))
+    siso = SISO.from_config(ServingConfig(
+        cache=CacheConfig(dim=d, answer_dim=d, capacity=256,
+                          theta_r=0.9, dynamic_threshold=False)))
     base = _unit(rng, 64, d)
     hist = np.repeat(base, 8, axis=0) \
         + 0.05 * rng.normal(size=(512, d)).astype(np.float32)

@@ -37,7 +37,9 @@ import numpy as np
 from repro.core.cache_manager import (CacheManager, filter_centroids,
                                       merge_centroids_reference)
 from repro.core.clustering import community_detection_reference
-from repro.core.siso import SISO, SISOConfig
+from repro.core.siso import SISO
+from repro.serving.config import CacheConfig, RefreshConfig, \
+    ServingConfig
 from repro.core.store import CentroidStore
 from repro.core.threshold import T2HTable
 from repro.serving.gateway import GatewayRequest, ServingGateway
@@ -56,9 +58,10 @@ def _clustered(rng, n, topics, d=DIM, noise=0.05):
 
 
 def _fresh_siso(rng, hist, capacity, refresh_async=True):
-    siso = SISO(SISOConfig(dim=DIM, answer_dim=DIM, capacity=capacity,
-                           dynamic_threshold=False, theta_r=THETA,
-                           refresh_async=refresh_async))
+    siso = SISO.from_config(ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=DIM, capacity=capacity,
+                          dynamic_threshold=False, theta_r=THETA),
+        refresh=RefreshConfig(async_pipeline=refresh_async)))
     siso.bootstrap(hist, hist, answer_ids=np.arange(len(hist)))
     return siso
 

@@ -1,0 +1,414 @@
+"""Multi-replica gateway group: cross-replica cache warming + rejoin
+(EXPERIMENTS.md §Replica, DESIGN.md §16).
+
+Three measurements over live ServingGateway replicas (virtual clock,
+same harness discipline as bench_restart):
+
+1. **Cross-replica hit lift** — N replicas behind zipf-skewed routing:
+   every cluster has a home replica, but a fraction of its traffic
+   spills to a uniformly random peer. With the replication log on
+   (``ReplicaGroup``, sync_every=1) a spillover query hits the entry its
+   home replica warmed; isolated replicas (same gateways, no log) must
+   re-miss per replica. The lift is the aggregate hit-ratio difference
+   on the identical stream + routing.
+
+2. **Aggregate SLO attainment** — the same synced group vs ONE replica
+   serving the whole stream. Sharing the load across N engines must not
+   cost attainment (it should help: misses queue N times shallower).
+
+3. **Kill-and-rejoin drill** — a child process serves phase 1 on a
+   2-replica in-process group, snapshotting replica B continuously; the
+   parent SIGKILLs it (``fault_tolerance.spawn_and_kill``), replays
+   phase 1 on a never-killed group, then rejoins a fresh replica from
+   the surviving disk: ``warm_start()`` (stale state) + ``group.add(...,
+   reconcile=True)`` (clone the freshest donor). Converged means the
+   rejoined replica's lookup stream is element-wise identical to the
+   never-killed donor's.
+
+Writes results/BENCH_replica.json. Full mode asserts the acceptance
+bars; --smoke runs tiny sizes without assertions (the CI gate compares
+the JSON against benchmarks/baselines/BENCH_replica.json via
+tools/check_bench_regression.py).
+
+  PYTHONPATH=src python -m benchmarks.bench_replica [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+DIM = 32
+CAPACITY = 256           # must exceed n_train: bootstrap clusters of
+                         # random unit vectors are near-singletons, and
+                         # the spill region (capacity - centroids) is
+                         # where recorded answers + peer merges live
+THETA_R = 0.86
+N_SLOTS = 2
+MAX_NEW = 6
+TICK_S = 0.05
+CHUNK = 8
+ZERO_LOAD_S = MAX_NEW * TICK_S
+SLO_S = 1.3 * ZERO_LOAD_S
+GAP_S = 0.015            # mean inter-arrival: the single-replica miss
+                         # stream runs at its lone engine's service
+                         # capacity (queueing bites), comfortable when
+                         # split across N engines
+SPILL_P = 0.35           # probability a request leaves its home replica
+ZIPF_S = 1.1
+_CHILD_ENV = "_BENCH_REPLICA_CHILD"
+
+
+class VirtualClock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def norm(x):
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def make_params():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    cfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def make_engines(params, cfg, n: int):
+    from repro.serving.engine import ModelEngine
+    return [ModelEngine(params, cfg, n_slots=N_SLOTS, max_len=48)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# workload: fresh zipf-popular clusters, home-replica routing + spillover
+# ---------------------------------------------------------------------------
+
+
+def build_workload(n_replicas: int, n_clusters: int, n_train: int,
+                   n_test: int, seed: int = 0):
+    """Returns (train_vectors, stream) where stream is a list of
+    (arrival_s, replica_idx, cluster_id, query_vec, answer_vec)."""
+    rng = np.random.default_rng(seed)
+    train = norm(rng.standard_normal((n_train, DIM))).astype(np.float32)
+    centers = norm(rng.standard_normal((n_clusters, DIM))).astype(np.float32)
+    p = 1.0 / np.arange(1, n_clusters + 1) ** ZIPF_S
+    p /= p.sum()
+    cids = rng.choice(n_clusters, size=n_test, p=p)
+    gaps = rng.exponential(GAP_S, size=n_test)
+    arrivals = np.cumsum(gaps)
+    spill = rng.random(n_test) < SPILL_P
+    alt = rng.integers(0, n_replicas, size=n_test)
+    stream = []
+    for i in range(n_test):
+        c = int(cids[i])
+        r = int(alt[i]) if spill[i] else c % n_replicas
+        q = norm(centers[c] + 0.02 * rng.standard_normal(DIM)) \
+            .astype(np.float32)
+        stream.append((float(arrivals[i]), r, c, q, centers[c]))
+    return train, centers, stream
+
+
+def make_gateway(engine, clock, train, *, persist_dir=None,
+                 delta_every: int = 1):
+    """One replica's process image, built through the ServingConfig
+    root. Fixed theta + suppressed refresh keep the run deterministic
+    under the virtual clock and pin every replica to the same commit
+    epoch, so the replication log folds without epoch rejections."""
+    from repro.serving.config import (CacheConfig, PersistenceConfig,
+                                      RefreshConfig, ServingConfig)
+    from repro.serving.gateway import ServingGateway
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
+                          theta_r=THETA_R, dynamic_threshold=False),
+        # frac suppresses refresh on a bootstrapped frontend (min only
+        # gates the never-bootstrapped path): one commit epoch for the
+        # whole run, so every delta folds through the spill merge and
+        # the epoch barrier never has to reconcile
+        refresh=RefreshConfig(frac=1000.0, min=10_000_000,
+                              async_pipeline=False),
+        persistence=(PersistenceConfig(directory=persist_dir,
+                                       delta_every=delta_every)
+                     if persist_dir else None),
+        slo_latency=SLO_S)
+    gw = ServingGateway.from_config(cfg, engine=engine,
+                                    embed_fn=lambda vs: np.stack(vs),
+                                    clock=clock)
+    gw.frontend.bootstrap(train, train,
+                          answer_ids=np.arange(len(train)))
+    return gw
+
+
+def drive_stream(targets, clock, stream, lo: int = 0, hi=None,
+                 max_ticks: int = 500_000):
+    """Submit stream[lo:hi] to its routed target as arrivals come due.
+    Targets are Replica objects or bare gateways (duck-typed submit).
+    Returns the flat hit mask in submission order."""
+    from repro.serving.gateway import GatewayRequest
+    hi = len(stream) if hi is None else hi
+    gws = [getattr(t, "gw", t) for t in targets]
+    hits, i = [], lo
+    for _ in range(max_ticks):
+        idle = all(not g.sched.queue and not g.sched.active for g in gws)
+        if i >= hi and idle:
+            return np.concatenate(hits) if hits else np.zeros(0, bool)
+        due = [[] for _ in targets]
+        while i < hi and stream[i][0] <= clock.t:
+            _, r, c, q, ans = stream[i]
+            # rid doubles as the recorded answer id — offset it clear of
+            # the bootstrap ids (0..n_train), which are centroid-owned
+            # and deliberately not merged by the replication log
+            due[r % len(targets)].append(GatewayRequest(
+                rid=10_000 + i,
+                model_tokens=np.asarray([c % 97, 1, 2], np.int32),
+                embed_tokens=q, max_new=MAX_NEW, answer_vec=ans))
+            i += 1
+        if any(due):
+            for r, reqs in enumerate(due):
+                for j in range(0, len(reqs), CHUNK):
+                    hits.append(np.asarray(
+                        targets[r].submit(reqs[j: j + CHUNK],
+                                          now=clock.t)).copy())
+            clock.t += TICK_S
+        else:
+            for g in gws:
+                g.step()
+            clock.t += TICK_S
+            if (idle and i < hi and stream[i][0] > clock.t):
+                clock.t = float(stream[i][0])
+    raise RuntimeError("drive loop exceeded max_ticks")
+
+
+def agg_attainment(gateways) -> float:
+    waits = [r.t_done - r.t_submit
+             for gw in gateways for r in gw.done]
+    if not waits:
+        return 0.0
+    return float(np.mean(np.asarray(waits) <= SLO_S))
+
+
+# ---------------------------------------------------------------------------
+# measurement 1+2: synced group vs isolated replicas vs single replica
+# ---------------------------------------------------------------------------
+
+
+def run_group(params, mcfg, n_replicas: int, n_clusters: int,
+              n_train: int, n_test: int) -> dict:
+    from repro.distributed.replication import ReplicaGroup, ReplicationConfig
+    train, _, stream = build_workload(n_replicas, n_clusters, n_train,
+                                      n_test)
+    engines = make_engines(params, mcfg, n_replicas)
+
+    # synced: one shared replication log
+    clock = VirtualClock()
+    group = ReplicaGroup(ReplicationConfig(n_replicas=n_replicas,
+                                           sync_every=1, apply_budget=64))
+    reps = [group.add(f"r{k}", make_gateway(engines[k], clock, train))
+            for k in range(n_replicas)]
+    hits_sync = drive_stream(reps, clock, stream)
+    group.drain_all()
+    att_sync = agg_attainment([r.gw for r in reps])
+    merged = sum(r.merged_rows for r in reps)
+
+    # isolated: identical gateways + routing, no log
+    clock = VirtualClock()
+    solo = [make_gateway(engines[k], clock, train)
+            for k in range(n_replicas)]
+    hits_iso = drive_stream(solo, clock, stream)
+    for g in solo:
+        g.drain()
+    att_iso = agg_attainment(solo)
+
+    # single replica takes the whole stream (attainment baseline)
+    clock = VirtualClock()
+    one = make_gateway(engines[0], clock, train)
+    hits_one = drive_stream([one], clock, stream)
+    one.drain()
+    att_one = agg_attainment([one])
+
+    out = {
+        "replicas": n_replicas,
+        "n_test": n_test,
+        "hit_ratio_sync": float(hits_sync.mean()),
+        "hit_ratio_isolated": float(hits_iso.mean()),
+        "hit_ratio_single": float(hits_one.mean()),
+        "hit_lift": float(hits_sync.mean() - hits_iso.mean()),
+        "lift_positive": bool(hits_sync.mean() > hits_iso.mean()),
+        "agg_attainment_sync": att_sync,
+        "agg_attainment_isolated": att_iso,
+        "attainment_single": att_one,
+        "attainment_ok": bool(att_sync >= att_one - 0.02),
+        "merged_rows": int(merged),
+        "log_records": len(group.log.records),
+    }
+    print(f"  R={n_replicas}: hit sync={out['hit_ratio_sync']:.3f} "
+          f"iso={out['hit_ratio_isolated']:.3f} "
+          f"lift={out['hit_lift']:+.3f}  attain "
+          f"sync={att_sync:.3f} iso={att_iso:.3f} single={att_one:.3f}  "
+          f"({merged} rows merged)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# measurement 3: kill-and-rejoin drill
+# ---------------------------------------------------------------------------
+
+
+def _drill_sizes(smoke: bool):
+    return dict(n_clusters=16, n_train=96, n_test=64) if smoke else \
+        dict(n_clusters=32, n_train=192, n_test=160)
+
+
+def child_serve(ckpt_dir: str, smoke: bool) -> int:
+    """Child body: 2-replica group, replica B snapshotting continuously,
+    until the parent SIGKILLs us mid-phase-1."""
+    from repro.distributed.replication import ReplicaGroup, ReplicationConfig
+    sz = _drill_sizes(smoke)
+    params, mcfg = make_params()
+    engines = make_engines(params, mcfg, 2)
+    train, _, stream = build_workload(2, sz["n_clusters"], sz["n_train"],
+                                      sz["n_test"], seed=1)
+    clock = VirtualClock()
+    group = ReplicaGroup(ReplicationConfig(sync_every=1, apply_budget=64))
+    ra = group.add("a", make_gateway(engines[0], clock, train))
+    rb = group.add("b", make_gateway(engines[1], clock, train,
+                                     persist_dir=ckpt_dir, delta_every=1))
+    rb.gw.snapshot(full=True)       # at least one full snapshot early
+    drive_stream([ra, rb], clock, stream, hi=len(stream) // 2)
+    group.drain_all()
+    rb.gw.ckpt.wait()
+    return 0
+
+
+def run_drill(params, mcfg, workdir: str, smoke: bool) -> dict:
+    from repro.distributed.fault_tolerance import spawn_and_kill
+    from repro.distributed.replication import ReplicaGroup, ReplicationConfig
+    sz = _drill_sizes(smoke)
+    ckpt_dir = os.path.join(workdir, "ckpt_replica_b")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    env = dict(os.environ)
+    env[_CHILD_ENV] = json.dumps({"dir": ckpt_dir, "smoke": smoke})
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+
+    def steps_on_disk() -> list[int]:
+        try:
+            return sorted(int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+                          if n.startswith("step_") and "tmp" not in n)
+        except (FileNotFoundError, ValueError):
+            return []
+
+    killed, ran_s = spawn_and_kill(
+        [sys.executable, os.path.abspath(__file__)],
+        ready=lambda: len(steps_on_disk()) >= 3,
+        env=env, grace_s=0.1, timeout_s=600.0)
+    steps = steps_on_disk()
+    print(f"  child killed={killed} after {ran_s:.1f}s; "
+          f"{len(steps)} snapshot(s) survived")
+
+    # never-killed group replays phase 1 (same seeds => same state)
+    train, centers, stream = build_workload(
+        2, sz["n_clusters"], sz["n_train"], sz["n_test"], seed=1)
+    engines = make_engines(params, mcfg, 2)
+    clock = VirtualClock()
+    group = ReplicaGroup(ReplicationConfig(sync_every=1, apply_budget=64))
+    ra = group.add("a", make_gateway(engines[0], clock, train))
+    rb = group.add("b", make_gateway(engines[1], clock, train))
+    drive_stream([ra, rb], clock, stream, hi=len(stream) // 2)
+    group.drain_all()
+    group.sync_all(clock.t)
+
+    # rejoin: warm-start from the surviving disk, then clone the donor
+    gw2 = make_gateway(engines[1], clock, train, persist_dir=ckpt_dir)
+    meta = gw2.warm_start()
+    r2 = group.add("b2", gw2, reconcile=True)
+    donor = group.donor_for(r2)
+
+    # identical probe streams: cluster centers (+noise) seen in phase 1
+    rng = np.random.default_rng(99)
+    seen = sorted({c for _, _, c, _, _ in stream[:len(stream) // 2]})
+    probe = norm(centers[seen] + 0.02 * rng.standard_normal(
+        (len(seen), DIM))).astype(np.float32)
+    res_d = donor.gw.frontend.handle_batch(probe.copy(), now=clock.t)
+    res_r = r2.gw.frontend.handle_batch(probe.copy(), now=clock.t)
+    converged = bool(np.array_equal(res_d.hit, res_r.hit)
+                     and np.array_equal(res_d.answer_id, res_r.answer_id)
+                     and np.array_equal(res_d.region, res_r.region))
+    out = {
+        "killed_while_alive": bool(killed),
+        "child_ran_s": ran_s,
+        "snapshots_survived": len(steps),
+        "restored_kind": meta["kind"],
+        "recovery_s": meta["recovery_s"],
+        "reconciled_from": donor.name,
+        "probe_n": len(probe),
+        "probe_hits": int(res_d.hit.sum()),
+        "converged": converged,
+    }
+    print(f"  rejoin: restored {meta['kind']} then cloned {donor.name}; "
+          f"probe {out['probe_hits']}/{out['probe_n']} hits, "
+          f"converged={converged}")
+    return out
+
+
+def main(argv=None) -> int:
+    if os.environ.get(_CHILD_ENV):
+        spec = json.loads(os.environ[_CHILD_ENV])
+        return child_serve(spec["dir"], spec["smoke"])
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, no acceptance assertions")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="override replica count (default 2 smoke / 4 full)")
+    args, _ = ap.parse_known_args(argv)
+    n_rep = args.replicas or (2 if args.smoke else 4)
+    n_clusters, n_train, n_test = (24, 120, 140) if args.smoke \
+        else (48, 160, 480)
+
+    params, mcfg = make_params()
+    workdir = tempfile.mkdtemp(prefix="bench_replica_")
+    t0 = time.perf_counter()
+    print("== cross-replica hit lift + aggregate attainment ==")
+    grp = run_group(params, mcfg, n_rep, n_clusters, n_train, n_test)
+    print("== kill-and-rejoin drill ==")
+    drill = run_drill(params, mcfg, workdir, args.smoke)
+    payload = {**grp, "drill": drill, "slo_s": SLO_S,
+               "wall_s": time.perf_counter() - t0,
+               "smoke": bool(args.smoke)}
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "BENCH_replica.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    shutil.rmtree(workdir, ignore_errors=True)
+
+    if not args.smoke:
+        assert grp["lift_positive"] and grp["hit_lift"] > 0.02, \
+            "replication log gave no cross-replica hit lift"
+        assert grp["attainment_ok"], \
+            "sharing load across replicas cost SLO attainment"
+        assert drill["converged"], \
+            "rejoined replica diverged from the never-killed donor"
+        assert drill["snapshots_survived"] >= 1
+        print("acceptance OK: positive hit lift, attainment held, "
+              "rejoin converged")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -89,13 +89,17 @@ def make_gateway(engine, *, bootstrap=None, persist_dir=None,
     budget is wall-clock, so two runs of even the SAME state diverge in
     refresh pacing; the blocking path is deterministic under the virtual
     clock (same reasoning as bench_slo)."""
-    from repro.core.siso import SISO, SISOConfig
+    from repro.core.siso import SISO
+    from repro.serving.config import CacheConfig, RefreshConfig, \
+        ServingConfig
     from repro.serving.gateway import ServingGateway
     from repro.serving.simulator import bootstrap_frontend
-    cfg = SISOConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
-                     theta_r=THETA_R, dynamic_threshold=True,
-                     refresh_async=False)
-    siso = SISO(cfg, slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
+                          theta_r=THETA_R, dynamic_threshold=True),
+        refresh=RefreshConfig(async_pipeline=False),
+        slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    siso = SISO.from_config(cfg)
     siso.threshold.lambda_window = 2.0
     if bootstrap is not None:
         bootstrap_frontend(siso, bootstrap)

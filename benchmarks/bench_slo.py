@@ -28,7 +28,9 @@ import numpy as np
 
 from benchmarks.common import save, timer
 from repro.configs.base import get_config
-from repro.core.siso import SISO, SISOConfig
+from repro.core.siso import SISO
+from repro.serving.config import CacheConfig, RefreshConfig, \
+    ServingConfig
 from repro.data.synth import QueryBatch
 from repro.models import lm
 from repro.serving.baselines import NoCache, VectorCache
@@ -80,12 +82,14 @@ def make_frontend(kind: str, train: QueryBatch):
     # virtual clock, where a synchronous refresh is free by construction;
     # the incremental pipeline's wall-clock behavior is bench_refresh's
     # subject (EXPERIMENTS.md §Refresh)
-    cfg = SISOConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
-                     theta_r=THETA_R, dynamic_threshold=True,
-                     refresh_async=False)
-    # llm_latency starts as a deliberately wrong guess: the live EMA
-    # calibration must pull it to the engine's real (virtual) service time
-    siso = SISO(cfg, slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=DIM, capacity=CAPACITY,
+                          theta_r=THETA_R, dynamic_threshold=True),
+        refresh=RefreshConfig(async_pipeline=False),
+        # llm_latency starts as a deliberately wrong guess: the live EMA
+        # calibration must pull it to the engine's real (virtual) service
+        slo_latency=SLO_S, llm_latency=0.2 * ZERO_LOAD_S)
+    siso = SISO.from_config(cfg)
     siso.threshold.lambda_window = LAMBDA_WINDOW
     bootstrap_frontend(siso, train)
     return siso

@@ -83,11 +83,15 @@ def build_stream(rng, steady_topics: int, n_a: int, n_b: int):
 
 
 def make_siso(capacity: int, tenancy):
-    from repro.core.siso import SISO, SISOConfig
-    cfg = SISOConfig(dim=DIM, answer_dim=ADIM, capacity=capacity,
-                     theta_r=THETA_R, dynamic_threshold=False,
-                     refresh_async=False, tenancy=tenancy)
-    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+    from repro.core.siso import SISO
+    from repro.serving.config import CacheConfig, RefreshConfig, \
+        ServingConfig
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=ADIM, capacity=capacity,
+                          theta_r=THETA_R, dynamic_threshold=False),
+        refresh=RefreshConfig(async_pipeline=False), tenancy=tenancy,
+        slo_latency=1.0, llm_latency=0.5)
+    return SISO.from_config(cfg)
 
 
 def serve(siso, tenants, vectors, answers, lo=0, hi=None,

@@ -84,11 +84,15 @@ def build_stream(rng, topic: np.ndarray, steps: int, phase_len: int,
 
 
 def make_siso(capacity: int, tiered_cfg=None):
-    from repro.core.siso import SISO, SISOConfig
-    cfg = SISOConfig(dim=DIM, answer_dim=ADIM, capacity=capacity,
-                     theta_r=THETA_R, dynamic_threshold=False,
-                     refresh_async=False, tiered=tiered_cfg)
-    return SISO(cfg, slo_latency=1.0, llm_latency=0.5)
+    from repro.core.siso import SISO
+    from repro.serving.config import CacheConfig, RefreshConfig, \
+        ServingConfig
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=DIM, answer_dim=ADIM, capacity=capacity,
+                          theta_r=THETA_R, dynamic_threshold=False),
+        refresh=RefreshConfig(async_pipeline=False), tiering=tiered_cfg,
+        slo_latency=1.0, llm_latency=0.5)
+    return SISO.from_config(cfg)
 
 
 def serve(siso, questions, answers, sched, rng_seed: int = 3) -> dict:

@@ -34,6 +34,7 @@ BENCHES = [
     "bench_tiered",         # EXPERIMENTS.md §Tiered hierarchy drill
     "bench_tenancy",        # EXPERIMENTS.md §Tenancy isolation drill
     "bench_quant",          # EXPERIMENTS.md §Quant int8 plane drill
+    "bench_replica",        # EXPERIMENTS.md §Replica group + rejoin drill
 ]
 
 

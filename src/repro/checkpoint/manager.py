@@ -210,6 +210,14 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         return steps[-1], self.restore(steps[-1])
 
+    def restore_entry(self, step: int, key: str) -> Any:
+        """Load one top-level entry of a checkpoint — e.g. the tiny
+        ``meta`` head (kind + refresh epoch) that warm restart and the
+        replication rejoin path read to classify snapshots against the
+        epoch barrier (DESIGN.md §12/§16) before committing to a full
+        load."""
+        return self.restore(step, keys=[key])[key]
+
     def all_steps(self) -> list[int]:
         steps = []
         for name in os.listdir(self.dir):

@@ -991,6 +991,54 @@ class SemanticCache:
                 self._dev = None
         self._hnsw = None       # graph path stays rebuild-based
 
+    def update_spill_row(self, row: int, vector: np.ndarray,
+                         answer: np.ndarray) -> None:
+        """In-place overwrite of a live spill row's vector + answer,
+        keeping its answer identity and LRU recency (newest-answer-wins
+        replication merge, DESIGN.md §16). Recency deliberately does NOT
+        move: a peer's answer refresh is not a local access, and bumping
+        it would let replication traffic distort the local LRU order.
+        The device mirror gets the same donated single-row patch as
+        ``insert_spill``."""
+        vector = np.asarray(vector, np.float32)
+        answer = np.asarray(answer, np.float32)
+        self._quant_restore = None   # snapshot codes no longer match
+        self.spill.vectors[row] = vector
+        self.spill.answers[row] = answer
+        drow = len(self.centroids) + row
+        if self._dev is not None:
+            if drow < self._dev.rows:
+                self._dev.write_row(drow, vector, answer,
+                                    int(self.spill.answer_id[row]))
+                self.dev_row_writes += 1
+            else:
+                self._dev = None
+        self._hnsw = None
+
+    def merge_access(self, ids: np.ndarray, access: np.ndarray) -> int:
+        """Fold a peer's centroid access counts into ours by per-id max
+        (replication merge policy, DESIGN.md §16). Operates on the id
+        intersection only — after a same-epoch check the regions are
+        normally identical, but a row evicted locally just stays absent.
+        Access counts live host-side only, so no mirror invalidation.
+        Returns the number of rows whose count was raised."""
+        ids = np.asarray(ids, np.int64)
+        access = np.asarray(access, np.float64)
+        if not len(ids) or not len(self.centroids):
+            return 0
+        order = np.argsort(self.centroids.ids, kind="stable")
+        sorted_ids = self.centroids.ids[order]
+        loc = np.minimum(np.searchsorted(sorted_ids, ids),
+                         len(sorted_ids) - 1)
+        present = sorted_ids[loc] == ids
+        rows = order[loc[present]]
+        if not len(rows):
+            return 0
+        peer = access[present]
+        raised = peer > self.centroids.access_count[rows]
+        self.centroids.access_count[rows[raised]] = peer[raised]
+        return int(raised.sum())
+
     # --------------------------------------------------------------- metrics
 
     @property

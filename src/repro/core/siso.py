@@ -9,6 +9,7 @@ individual-vector LRU spill for leftover capacity.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -73,7 +74,21 @@ class SISOConfig:
 
 class SISO:
     def __init__(self, cfg: SISOConfig, slo_latency: float = 1.0,
-                 llm_latency: float = 0.5):
+                 llm_latency: float = 0.5, _from_config: bool = False):
+        # Deprecation shim (DESIGN.md §16.4): the flat SISOConfig grew
+        # whole serving planes (shard/tiered/tenancy) as side-car fields;
+        # those now live as nested configs on serving.ServingConfig. The
+        # legacy spelling keeps working bit-identically — it just warns.
+        if not _from_config and (cfg.shard is not None
+                                 or cfg.tiered is not None
+                                 or cfg.tenancy is not None):
+            warnings.warn(
+                "constructing SISO from a flat SISOConfig with "
+                "shard=/tiered=/tenancy= is deprecated; build a "
+                "serving.ServingConfig (nested sharding/tiering/tenancy) "
+                "and call SISO.from_config(cfg) — see the README "
+                "'ServingConfig migration' table",
+                DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.cache = SemanticCache(cfg.dim, cfg.answer_dim, cfg.capacity,
                                    backend=cfg.backend,
@@ -112,6 +127,15 @@ class SISO:
             if cfg.tiered is not None:
                 self.cache.fair_share_eviction = True
                 self.cache.tenant_of = self.tenant_of
+
+    @classmethod
+    def from_config(cls, cfg) -> "SISO":
+        """Build from a :class:`repro.serving.config.ServingConfig` — the
+        composable construction surface (DESIGN.md §16.4). Lowers to the
+        flat SISOConfig through ``cfg.to_siso_config()``, so the result
+        is bit-identical to legacy construction with the same fields."""
+        return cls(cfg.to_siso_config(), slo_latency=cfg.slo_latency,
+                   llm_latency=cfg.llm_latency, _from_config=True)
 
     # ----------------------------------------------------------------- online
 
@@ -435,6 +459,21 @@ class SISO:
         self._log_vecs.append(np.asarray(vector, np.float32))
         self._log_answers.append((np.asarray(answer, np.float32), answer_id))
         self.cache.insert_spill(vector, answer, answer_id)
+
+    # CacheFrontend protocol surface (serving/__init__.py): the gateway
+    # feature-detects handle_batch first, so these aliases change nothing
+    # on the serving path — they make SISO substitutable wherever the
+    # simpler lookup/record frontends are accepted.
+    def lookup(self, vectors: np.ndarray, now: float = 0.0,
+               user_ids: Optional[np.ndarray] = None,
+               tenant_ids: Optional[np.ndarray] = None) -> LookupResult:
+        return self.handle_batch(vectors, now=now, user_ids=user_ids,
+                                 tenant_ids=tenant_ids)
+
+    def record(self, vector: np.ndarray, answer: np.ndarray,
+               answer_id: int = -1, tenant: Optional[int] = None) -> None:
+        self.record_llm_answer(vector, answer, answer_id=answer_id,
+                               tenant=tenant)
 
     def draw_t2h_sample(self, fresh_vectors: np.ndarray,
                         rng: Optional[np.random.Generator] = None

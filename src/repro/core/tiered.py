@@ -709,6 +709,16 @@ class TieredCache:
         self.device.insert_spill(vector, answer, answer_id,
                                  cluster_size=cluster_size)
 
+    def record(self, vector: np.ndarray, answer: np.ndarray,
+               answer_id: int = -1, cluster_size: float = 1.0) -> None:
+        """CacheFrontend protocol spelling of insert_spill()."""
+        self.insert_spill(vector, answer, answer_id=answer_id,
+                          cluster_size=cluster_size)
+
+    def stats(self) -> dict:
+        """CacheFrontend protocol stats: overall ratio + per-tier split."""
+        return {"hit_ratio": self.hit_ratio, "tiers": self.tier_stats()}
+
     # ------------------------------------------------------- demotion flows
 
     def _on_device_evict(self, vectors, answers, answer_id, cluster_size,

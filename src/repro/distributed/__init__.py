@@ -1,2 +1,10 @@
 """Distribution substrate: sharding rules, collectives, gradient
-compression, pipeline stages, elastic re-meshing, fault tolerance."""
+compression, pipeline stages, elastic re-meshing, fault tolerance,
+and delta-streamed cache replication (DESIGN.md §16)."""
+
+from repro.distributed.replication import (DeltaRecord, Replica,
+                                           ReplicaGroup, ReplicationConfig,
+                                           ReplicationLog)
+
+__all__ = ["DeltaRecord", "Replica", "ReplicaGroup", "ReplicationConfig",
+           "ReplicationLog"]

@@ -1,0 +1,397 @@
+"""Delta-streamed cache replication across gateway replicas (DESIGN.md §16).
+
+Production serving is N gateway replicas behind a load balancer; a hit
+learned on one replica should warm all of them. This module repurposes
+the persistence plane's ``state_delta()`` payloads (DESIGN.md §12) as a
+**replication log**: each :class:`Replica` wraps a ``ServingGateway``,
+periodically publishes its device-tier delta as a :class:`DeltaRecord`,
+and folds peer records in on its own budget-sliced refresh tick — so
+replication work rides the same non-blocking slot the RefreshPipeline
+already occupies and never stalls serving.
+
+Merge policy (per record, applied only when the record's refresh epoch
+matches the receiver's — the refresh commit is the reconciliation
+barrier, so a delta never straddles a store swap):
+
+* centroid region — per-id **max access count** wins
+  (:meth:`SemanticCache.merge_access`); vectors/answers/ids only change
+  at a commit, so between commits the counts are the whole story.
+* spill region — per answer identity, **newest answer wins** by publish
+  stamp: an unknown identity is inserted through the normal LRU path, a
+  known identity is overwritten in place
+  (:meth:`SemanticCache.update_spill_row`), an identity already promoted
+  into the receiver's centroid region is left alone.
+* hit/miss counters and recency state are **never** merged — they are
+  per-replica observations, not shared cache content.
+
+A record from a *newer* epoch than the receiver flags a reconcile: at
+the next refresh tick the lagging replica clones the group's freshest
+replica wholesale (deep-copied full ``state_dict()``), which is exactly
+the warm-restart path with an in-process donor instead of a disk
+snapshot. The same clone serves SIGKILL'd replicas rejoining the group
+(``ReplicaGroup.add(..., reconcile=True)`` after a disk
+``warm_start()``) — bench_replica's kill-and-rejoin drill proves the
+rejoined replica's lookup stream is element-wise identical to a
+never-killed replica's.
+
+:class:`ReplicationLog` is an in-process append-only bus with per-replica
+cursors; a networked deployment would swap in a log service — the record
+schema (origin, seq, epoch, stamp, payload) is transport-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ReplicationConfig:
+    """Knobs for the replication plane (nested under
+    ``ServingConfig.replication``)."""
+    n_replicas: int = 2      # replicas a launch-time group builds
+    sync_every: int = 1      # publish a delta every N submitted batches
+                             # (0 = never publish: an isolated replica)
+    apply_budget: int = 8    # peer records folded in per refresh tick;
+                             # drain folds everything pending
+
+
+@dataclass
+class DeltaRecord:
+    """One replication-log entry: a device-tier ``state_delta()`` payload
+    plus the routing/ordering envelope."""
+    origin: str              # publishing replica's name
+    seq: int                 # per-origin sequence number
+    epoch: int               # origin's refresh epoch at publish time
+    stamp: float             # publish time (serving clock)
+    payload: dict            # deep-copied SemanticCache.state_delta()
+    row_stamps: Dict[int, float] = field(default_factory=dict)
+    # row_stamps: answer_id -> the stamp of the publish that first carried
+    # this row's current answer — the "newest answer wins" tiebreaker.
+
+
+class ReplicationLog:
+    """Append-only in-process replication bus. Replicas publish
+    :class:`DeltaRecord`s and consume from their own cursor."""
+
+    def __init__(self) -> None:
+        self.records: List[DeltaRecord] = []
+
+    def publish(self, rec: DeltaRecord) -> None:
+        self.records.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+def _deep_copy_state(obj):
+    """Deep-copy a state tree. ``CentroidStore.from_state`` aliases the
+    arrays it is handed (cheap for the disk path, where the arrays are
+    freshly deserialized) — an in-process clone must therefore copy, or
+    the receiver's in-place mutations would corrupt the donor."""
+    if isinstance(obj, dict):
+        return {k: _deep_copy_state(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(_deep_copy_state(v) for v in obj)
+    if isinstance(obj, np.ndarray):
+        return obj.copy()
+    return obj
+
+
+def _device_cache(frontend):
+    """The device-tier SemanticCache of a frontend — the store whose
+    ``state_delta()`` is the replication payload. For a tiered frontend
+    only the device tier replicates (warm/cold tiers refill from local
+    traffic; shipping disk tiers over the log would swamp it)."""
+    cache = frontend.cache
+    return cache.device if hasattr(cache, "device") else cache
+
+
+class Replica:
+    """One gateway in a :class:`ReplicaGroup`.
+
+    Wraps ``submit()`` to publish a delta every ``sync_every`` batches,
+    and shadows the frontend's ``refresh_tick``/``refresh_drain`` (via
+    instance attributes — the gateway's ``_maybe_refresh`` already calls
+    through these on every submit) so peer records are folded in on the
+    same budget-sliced slot, at most ``apply_budget`` per tick.
+    """
+
+    def __init__(self, name: str, gateway, log: ReplicationLog,
+                 cfg: Optional[ReplicationConfig] = None) -> None:
+        self.name = name
+        self.gw = gateway
+        self.log = log
+        self.cfg = cfg or ReplicationConfig()
+        self.group: Optional["ReplicaGroup"] = None
+        self.seq = 0             # next record number to publish
+        self.cursor = 0          # next log index to consume
+        self._since_pub = 0
+        self._reconcile_due = False
+        # answer_id -> stamp of the publish that carried its current
+        # answer; locally recorded rows are stamped at their first publish
+        self._stamps: Dict[int, float] = {}
+        # merge observability (Replica.report / gateway report)
+        self.applied = 0
+        self.merged_rows = 0
+        self.merged_access = 0
+        self.rejected_epoch = 0
+        self.reconciles = 0
+        self._wrap_refresh()
+
+    # ------------------------------------------------------------ refresh tap
+    def _wrap_refresh(self) -> None:
+        """Shadow the frontend's refresh/record entry points with instance
+        attributes. The gateway already calls ``fe.refresh_tick()`` once
+        per submit, so peer application rides the budget-sliced refresh
+        slot; ``record_llm_answer`` is tapped to stamp locally recorded
+        answers at record time (their newest-wins timestamp)."""
+        fe = self.gw.frontend
+        self._tick0 = getattr(fe, "refresh_tick", None)
+        if self._tick0 is not None:
+            fe.refresh_tick = self._refresh_tick
+        self._drain0 = getattr(fe, "refresh_drain", None)
+        if self._drain0 is not None:
+            fe.refresh_drain = self._refresh_drain
+        self._rec0 = getattr(fe, "record_llm_answer", None)
+        if self._rec0 is not None:
+            fe.record_llm_answer = self._record_llm_answer
+
+    def _refresh_tick(self, budget_s: Optional[float] = None):
+        self.apply_pending(self.cfg.apply_budget)
+        return self._tick0(budget_s)
+
+    def _refresh_drain(self):
+        self.apply_pending(None)     # drain is a barrier: fold everything
+        return self._drain0()
+
+    def _record_llm_answer(self, vector, answer, answer_id: int = -1,
+                           tenant=None):
+        out = self._rec0(vector, answer, answer_id=answer_id, tenant=tenant)
+        if answer_id >= 0:
+            # a (re-)recorded answer is the newest content for its id —
+            # stamp now, not at the next publish
+            self._stamps[int(answer_id)] = float(self.gw.clock())
+        return out
+
+    # --------------------------------------------------------------- serving
+    def submit(self, batch, now: Optional[float] = None) -> np.ndarray:
+        # apply peer deltas at the batch edge so this very batch can hit
+        # peer-warmed entries (the gateway's refresh tick runs only after
+        # its lookup); mid-pipeline the tick stays the only apply point,
+        # keeping the commit-epoch barrier intact across store swaps
+        pipe = getattr(self.gw.frontend, "pipeline", None)
+        if pipe is None or getattr(pipe, "phase", "idle") == "idle":
+            self.apply_pending(self.cfg.apply_budget)
+        hit = self.gw.submit(batch, now=now)
+        if self.cfg.sync_every > 0:
+            self._since_pub += 1
+            if self._since_pub >= self.cfg.sync_every:
+                self.publish(self.gw.clock() if now is None else now)
+        return hit
+
+    # ------------------------------------------------------------- publishing
+    def publish(self, now: float) -> DeltaRecord:
+        """Publish this replica's current device-tier delta. The payload
+        is deep-copied: ``state_delta()`` returns live arrays, and a log
+        record must describe the instant of publish, not track the
+        producer's future mutations."""
+        fe = self.gw.frontend
+        cache = _device_cache(fe)
+        payload = _deep_copy_state(cache.state_delta())
+        aids = np.asarray(payload["spill"]["answer_id"], np.int64)
+        row_stamps: Dict[int, float] = {}
+        for a in aids:
+            aid = int(a)
+            if aid < 0:
+                continue
+            if aid not in self._stamps:      # recorded locally since the
+                self._stamps[aid] = float(now)   # last publish
+            row_stamps[aid] = self._stamps[aid]
+        rec = DeltaRecord(origin=self.name, seq=self.seq,
+                          epoch=int(getattr(fe, "refresh_epoch", 0)),
+                          stamp=float(now), payload=payload,
+                          row_stamps=row_stamps)
+        self.seq += 1
+        self._since_pub = 0
+        self.log.publish(rec)
+        return rec
+
+    # ---------------------------------------------------------------- merging
+    def apply_pending(self, budget: Optional[int]) -> int:
+        """Consume peer records from the cursor, applying at most
+        ``budget`` (None = all). Runs a flagged reconcile afterwards —
+        i.e. at the refresh-tick barrier, never mid-lookup."""
+        applied = 0
+        while self.cursor < len(self.log.records):
+            if budget is not None and applied >= budget:
+                break
+            rec = self.log.records[self.cursor]
+            self.cursor += 1
+            if rec.origin == self.name:
+                continue
+            if self.apply(rec):
+                applied += 1
+        if self._reconcile_due and self.group is not None:
+            self.group.reconcile(self)
+        return applied
+
+    def apply(self, rec: DeltaRecord) -> bool:
+        """Fold one peer record into the local cache. Returns False (and
+        counts the rejection) when the record's epoch does not match —
+        the epoch barrier. A *newer*-epoch record additionally flags a
+        full reconcile from the group's freshest replica."""
+        fe = self.gw.frontend
+        my_epoch = int(getattr(fe, "refresh_epoch", 0))
+        if rec.epoch != my_epoch:
+            self.rejected_epoch += 1
+            if rec.epoch > my_epoch:
+                self._reconcile_due = True
+            return False
+        cache = _device_cache(fe)
+        self.merged_access += cache.merge_access(
+            rec.payload["centroid_ids"], rec.payload["centroid_access"])
+
+        sp = rec.payload["spill"]
+        aids = np.asarray(sp["answer_id"], np.int64)
+        self.applied += 1
+        if not len(aids):
+            return True
+        vecs = np.asarray(sp["vectors"], np.float32)
+        answers = np.asarray(sp["answers"], np.float32)
+        csize = np.asarray(sp["cluster_size"], np.float64)
+        # stale -> fresh, so the peer's most-recent rows end up most
+        # recent locally when several insert through the LRU path
+        order = np.argsort(np.asarray(rec.payload["spill_last_use"]),
+                           kind="stable")
+        # a re-recorded identity can hold several peer rows (insert_spill
+        # does not dedupe); only the freshest one is that id's content —
+        # applying a staler duplicate after it would clobber the merge
+        freshest = {}
+        for j in order:
+            if int(aids[j]) >= 0:
+                freshest[int(aids[j])] = j
+        cent_ids = set(int(a) for a in cache.centroids.answer_id if a >= 0)
+        spill_row = {int(a): r for r, a in enumerate(cache.spill.answer_id)
+                     if a >= 0}
+        for j in order:
+            aid = int(aids[j])
+            if aid < 0 or freshest[aid] != j:
+                continue        # anonymous row / superseded duplicate
+            stamp = float(rec.row_stamps.get(aid, rec.stamp))
+            known = self._stamps.get(aid)
+            if known is not None and stamp <= known:
+                continue        # we already hold this answer (or newer)
+            if aid in cent_ids:
+                # identity already promoted into our centroid region; the
+                # centroid copy is authoritative until the next commit
+                self._stamps[aid] = stamp
+                continue
+            row = spill_row.get(aid)
+            if row is not None:     # known identity: newest answer wins
+                cache.update_spill_row(row, vecs[j], answers[j])
+            else:                   # unknown: normal LRU insert
+                cache.insert_spill(vecs[j], answers[j], answer_id=aid,
+                                   cluster_size=float(csize[j]))
+                rows = np.nonzero(cache.spill.answer_id == aid)[0]
+                if len(rows):
+                    r = int(rows[-1])
+                    # the insert may have evicted a victim: drop whatever
+                    # identity previously mapped to that slot
+                    spill_row = {a: rr for a, rr in spill_row.items()
+                                 if rr != r}
+                    spill_row[aid] = r
+            self._stamps[aid] = stamp
+            self.merged_rows += 1
+        return True
+
+    # ------------------------------------------------------------------ misc
+    def drain(self) -> None:
+        """Drain the wrapped gateway; the refresh_drain shadow folds all
+        pending peer records first. Publish afterwards: answers for this
+        batch's misses are recorded during the drain, so the submit-time
+        record always ships them one publish late — a request/response
+        front end (submit -> drain per request) would otherwise never
+        warm a peer with the answer it just computed."""
+        self.gw.drain()
+        if self.cfg.sync_every > 0:
+            self.publish(self.gw.clock())
+
+    def report(self) -> dict:
+        return {"published": self.seq, "cursor": self.cursor,
+                "applied": self.applied, "merged_rows": self.merged_rows,
+                "merged_access": self.merged_access,
+                "rejected_epoch": self.rejected_epoch,
+                "reconciles": self.reconciles,
+                "epoch": int(getattr(self.gw.frontend, "refresh_epoch", 0))}
+
+
+class ReplicaGroup:
+    """N gateway replicas sharing one replication log."""
+
+    def __init__(self, cfg: Optional[ReplicationConfig] = None) -> None:
+        self.cfg = cfg or ReplicationConfig()
+        self.log = ReplicationLog()
+        self.replicas: Dict[str, Replica] = {}
+
+    def add(self, name: str, gateway, reconcile: bool = False) -> Replica:
+        """Attach a gateway as a named replica. ``reconcile=True`` is the
+        rejoin path: the newcomer clones the group's freshest replica
+        instead of replaying log history (records published before the
+        join are superseded by the clone, so its cursor starts at the
+        donor's)."""
+        if name in self.replicas:
+            raise ValueError(f"replica {name!r} already in group")
+        rep = Replica(name, gateway, self.log, self.cfg)
+        rep.group = self
+        self.replicas[name] = rep
+        if reconcile and len(self.replicas) > 1:
+            self.reconcile(rep)
+        return rep
+
+    def donor_for(self, rep: Replica) -> Optional[Replica]:
+        """The freshest peer: highest (refresh epoch, published seq),
+        name as the deterministic tiebreaker."""
+        peers = [r for r in self.replicas.values() if r is not rep]
+        if not peers:
+            return None
+        return max(peers, key=lambda r: (
+            int(getattr(r.gw.frontend, "refresh_epoch", 0)), r.seq, r.name))
+
+    def reconcile(self, rep: Replica) -> bool:
+        """Clone the freshest peer's full frontend state into ``rep`` —
+        the warm-restart path with an in-process donor. Invoked at the
+        refresh-tick barrier (via apply_pending) or at join."""
+        donor = self.donor_for(rep)
+        rep._reconcile_due = False
+        if donor is None:
+            return False
+        state = _deep_copy_state(donor.gw.frontend.state_dict())
+        rep.gw.frontend.load_state(state)
+        if hasattr(rep.gw.frontend, "warm_start"):
+            rep.gw.frontend.warm_start()
+        rep._stamps = dict(donor._stamps)
+        rep.cursor = donor.cursor
+        rep.reconciles += 1
+        return True
+
+    def sync_all(self, now: float) -> None:
+        """Offline barrier for benches/tests: every replica publishes,
+        then every replica folds everything pending (the drain-time
+        analog of the per-tick budget)."""
+        for rep in self.replicas.values():
+            rep.publish(now)
+        for rep in self.replicas.values():
+            rep.apply_pending(None)
+
+    def drain_all(self) -> None:
+        for rep in self.replicas.values():
+            rep.drain()
+
+    def report(self) -> dict:
+        return {name: rep.report() for name, rep in self.replicas.items()}
+
+
+__all__ = ["ReplicationConfig", "DeltaRecord", "ReplicationLog",
+           "Replica", "ReplicaGroup"]

@@ -1,49 +1,290 @@
 """Runnable serving driver: SISO semantic cache in front of a zoo model.
 
-The full paper pipeline on one host (reduced configs on CPU):
-  1. bootstrap — cluster a historical query log into centroids, fill the
-     semantic cache, build the T2H table;
-  2. serve — embed each request, cache lookup at theta_R (dynamic via
-     M/D/1), miss -> continuous-batching engine; answers recorded back;
-  3. report — hit ratio, SLO attainment, latency breakdown.
+Three modes (``--mode``, DESIGN.md §16.3):
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
-      --requests 200 --rps 20
+* ``batch`` — the original one-shot driver: bootstrap from a synthetic
+  history, run the analytic SLO study, then push a real request stream
+  through the reduced model with continuous batching.
+* ``http`` — a thin stdlib HTTP front end over one ``ServingGateway``:
+  ``POST /v1/query`` with ``{"tokens": [...]}`` answers inline on a
+  cache hit or drives the engine to completion on a miss, tagging every
+  response with ``X-Cache: HIT|MISS`` and ``X-Cache-Region`` headers
+  (the drop-in proxy shape); ``GET /healthz`` reports serving state.
+  SIGTERM drains gracefully: in-flight work completes, new queries get
+  503, then the listener stops.
+* ``replica`` — the same front end over N gateways in a
+  :class:`ReplicaGroup` exchanging replication deltas (DESIGN.md §16),
+  requests routed per-user across replicas.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode batch --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --mode http --port 8080
+  PYTHONPATH=src python -m repro.launch.serve --mode replica --replicas 3
 """
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
+import zlib
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Sequence
 
-import jax
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.core.siso import SISO, SISOConfig
-from repro.data.synth import SyntheticWorkload
-from repro.models import lm
-from repro.serving.engine import AnalyticEngine, EngineModel, ModelEngine
-from repro.serving.scheduler import ContinuousBatchScheduler, Request
-from repro.serving.simulator import ServingSimulator, build_system, \
-    bootstrap_frontend
+# region int8 -> header tag (LookupResult.region, DESIGN.md §13/§14)
+REGION_NAMES = {-1: "miss", 0: "centroid", 1: "spill", 2: "warm",
+                3: "cold", 4: "overlay"}
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-14b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--profile", default="quora")
-    ap.add_argument("--requests", type=int, default=200)
-    ap.add_argument("--history", type=int, default=3000)
-    ap.add_argument("--rps", type=float, default=20.0)
-    ap.add_argument("--cv", type=float, default=1.0)
-    ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--capacity", type=int, default=256)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--no-dta", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def hash_embed_fn(dim: int):
+    """Deterministic token-sequence embedder for the HTTP modes: crc32 of
+    the token bytes seeds a unit vector, so identical queries map to
+    identical cache keys without a learned embedder in the loop."""
+    def fn(token_lists: Sequence[np.ndarray]) -> np.ndarray:
+        out = np.zeros((len(token_lists), dim), np.float32)
+        for i, toks in enumerate(token_lists):
+            seed = zlib.crc32(np.asarray(toks, np.int64).tobytes())
+            v = np.random.default_rng(seed).normal(size=dim)
+            out[i] = (v / np.linalg.norm(v)).astype(np.float32)
+        return out
+    return fn
+
+
+class CacheHTTPServer(ThreadingHTTPServer):
+    """stdlib HTTP front end over one or more gateways (DESIGN.md §16.3).
+
+    ``targets`` are submit-capable objects — bare ``ServingGateway``s or
+    ``Replica`` wrappers (whose ``submit`` additionally publishes
+    replication deltas). One lock serializes the serving path: the
+    gateway pipeline is single-threaded by design, and the front end is
+    a demo form factor, not a throughput claim.
+    """
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr, targets: Sequence, names: Sequence[str],
+                 clock=None):
+        super().__init__(addr, _Handler)
+        self.targets = list(targets)
+        self.names = list(names)
+        self.lock = threading.Lock()
+        self.clock = clock or time.perf_counter
+        self.draining = False
+        self._rid = 0
+        self._rr = 0
+
+    @staticmethod
+    def _gw(target):
+        return target.gw if hasattr(target, "gw") else target
+
+    def route(self, user: Optional[int]) -> int:
+        """Replica index for a request: per-user sticky hash (the load-
+        balancer shape), round-robin for anonymous traffic."""
+        if user is not None:
+            return int(user) % len(self.targets)
+        self._rr += 1
+        return (self._rr - 1) % len(self.targets)
+
+    def serve_query(self, body: dict) -> tuple[int, dict, dict]:
+        """The whole request path under the lock; returns
+        (http_status, response_json, extra_headers)."""
+        toks = np.asarray(body.get("tokens", []), np.int32)
+        if toks.size == 0:
+            return 400, {"error": "body needs a non-empty 'tokens' list"}, {}
+        user = body.get("user")
+        with self.lock:
+            if self.draining:
+                return 503, {"error": "draining"}, {"Retry-After": "1"}
+            ix = self.route(user)
+            target = self.targets[ix]
+            gw = self._gw(target)
+            rid = self._rid
+            self._rid += 1
+            from repro.serving.gateway import GatewayRequest
+            req = GatewayRequest(
+                rid=rid, model_tokens=toks,
+                user_id=None if user is None else int(user),
+                tenant=body.get("tenant"),
+                max_new=int(body.get("max_new", 16)))
+            done0 = len(gw.done)    # a hit lands right after this index
+            hit = bool(target.submit([req], now=self.clock())[0])
+            res = gw.last_result
+            out = self._await(gw, rid, done0)
+            if not hit and hasattr(target, "publish"):
+                # the miss's answer was recorded while _await drove the
+                # engine — publish it now so a repeat routed to a peer
+                # replica hits instead of waiting for the next submit
+                target.publish(self.clock())
+        region = int(res.region[0])
+        resp = {"rid": rid, "hit": hit, "replica": self.names[ix],
+                "region": REGION_NAMES.get(region, str(region)),
+                "sim": float(res.sim[0]),
+                "served_by": out.served_by if out is not None else None,
+                "tokens_out": (np.asarray(out.out).tolist()
+                               if out is not None and out.out is not None
+                               else None)}
+        headers = {"X-Cache": "HIT" if hit else "MISS",
+                   "X-Cache-Region": resp["region"],
+                   "X-Replica": self.names[ix]}
+        return 200, resp, headers
+
+    @staticmethod
+    def _await(gw, rid: int, done0: int, max_ticks: int = 10_000):
+        """Drive the engine until this rid completes (hits are already in
+        the done list from admit_resolved)."""
+        for _ in range(max_ticks):
+            for r in gw.done[done0:]:
+                if r.rid == rid:
+                    return r
+            if not gw.sched.active and not gw.sched.queue:
+                break
+            gw.step()
+        for r in gw.done[done0:]:
+            if r.rid == rid:
+                return r
+        return None
+
+    def health(self) -> dict:
+        reports = {}
+        for name, t in zip(self.names, self.targets):
+            gw = self._gw(t)
+            reports[name] = {"submitted": gw.stats.submitted,
+                             "epoch": int(getattr(gw.frontend,
+                                                  "refresh_epoch", 0))}
+        return {"status": "draining" if self.draining else "serving",
+                "replicas": reports}
+
+    def begin_drain(self) -> None:
+        """Graceful drain (SIGTERM): refuse new queries, complete queued
+        engine work, fold pending replication records, snapshot if
+        persistence is attached."""
+        with self.lock:
+            self.draining = True
+            for t in self.targets:
+                if hasattr(t, "drain"):     # Replica wrapper
+                    t.drain()
+                else:
+                    self._gw(t).drain()
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "siso-serve/1.0"
+
+    def log_message(self, fmt, *args):      # stay quiet under test
+        pass
+
+    def _send(self, status: int, payload: dict, headers: dict = ()) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in dict(headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._send(200, self.server.health())
+        else:
+            self._send(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):
+        if self.path != "/v1/query":
+            self._send(404, {"error": f"no route {self.path}"})
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError):
+            self._send(400, {"error": "malformed JSON body"})
+            return
+        status, payload, headers = self.server.serve_query(body)
+        self._send(status, payload, headers)
+
+
+# ---------------------------------------------------------------------------
+# mode drivers
+# ---------------------------------------------------------------------------
+
+
+def _serving_config(args) -> "ServingConfig":
+    from repro.serving.config import (CacheConfig, RefreshConfig,
+                                      ServingConfig)
+    return ServingConfig(
+        cache=CacheConfig(dim=args.dim, answer_dim=args.dim,
+                          capacity=args.capacity,
+                          dynamic_threshold=not args.no_dta),
+        refresh=RefreshConfig(min=args.refresh_min),
+        slo_latency=args.slo, llm_latency=args.slo / 1.3)
+
+
+def _make_engine(args):
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serving.engine import ModelEngine
+    cfg = get_config(args.arch).reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    return ModelEngine(params, cfg, n_slots=args.slots,
+                       max_len=128), cfg
+
+
+def run_http(args) -> int:
+    """--mode http / --mode replica: N gateways behind the front end."""
+    from repro.distributed.replication import ReplicaGroup, ReplicationConfig
+    from repro.serving.gateway import ServingGateway
+    n = args.replicas if args.mode == "replica" else 1
+    cfg = _serving_config(args)
+    embed = hash_embed_fn(args.dim)
+    engine, _ = _make_engine(args)
+    # without an answer_fn the scheduler records nothing on completion
+    # and repeat queries can never hit: embed the generated tokens with
+    # the same hasher so the answer key is deterministic too
+    answer_fn = lambda toks: embed([np.asarray(toks)])[0]
+    gws = [ServingGateway.from_config(cfg, engine=engine, embed_fn=embed,
+                                      answer_fn=answer_fn)
+           for _ in range(n)]
+    names = [f"r{i}" for i in range(n)]
+    if n > 1:
+        group = ReplicaGroup(cfg.replication or ReplicationConfig())
+        targets = [group.add(name, gw) for name, gw in zip(names, gws)]
+    else:
+        targets = gws
+    server = CacheHTTPServer((args.host, args.port), targets, names)
+    host, port = server.server_address[:2]
+    print(f"serving {n} replica(s) on http://{host}:{port} "
+          f"(POST /v1/query, GET /healthz)")
+
+    def _sigterm(signum, frame):
+        print("SIGTERM: draining...")
+        server.begin_drain()
+        threading.Thread(target=server.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    try:
+        server.serve_forever(poll_interval=0.2)
+    except KeyboardInterrupt:
+        server.begin_drain()
+    finally:
+        server.server_close()
+    return 0
+
+
+def run_batch(args) -> int:
+    """The original one-shot driver (analytic study + real engine pass),
+    constructed through the ServingConfig builders."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.data.synth import SyntheticWorkload
+    from repro.models import lm
+    from repro.serving.engine import AnalyticEngine, EngineModel, ModelEngine
+    from repro.serving.scheduler import ContinuousBatchScheduler, Request
+    from repro.serving.simulator import (ServingSimulator, bootstrap_frontend,
+                                         build_system)
 
     cfg = get_config(args.arch).reduced().replace(remat=False)
     wl = SyntheticWorkload(args.profile, dim=args.dim, n_clusters=500,
@@ -94,6 +335,35 @@ def main() -> int:
           f"cache hits {by['cache']}, engine {by['engine']}; "
           f"sample output tokens: {done[-1].out[:8]}")
     return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("batch", "http", "replica"),
+                    default="batch")
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--profile", default="quora")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--history", type=int, default=3000)
+    ap.add_argument("--rps", type=float, default=20.0)
+    ap.add_argument("--cv", type=float, default=1.0)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--no-dta", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # http/replica mode
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--refresh-min", type=int, default=32)
+    ap.add_argument("--slo", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    if args.mode == "batch":
+        return run_batch(args)
+    return run_http(args)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,50 @@
 """Serving layer: engines, continuous batching, gateway, SLO simulator,
-scenario-diverse workload generators."""
+scenario-diverse workload generators, and the CacheFrontend protocol."""
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.serving.config import (CacheConfig, PersistenceConfig,
+                                  RefreshConfig, ReplicationConfig,
+                                  ServingConfig)
 from repro.serving.gateway import (GatewayRequest, GatewayStats,
                                    ServingGateway)
 from repro.serving.workloads import SCENARIOS, Scenario, build_scenario
 
-__all__ = ["GatewayRequest", "GatewayStats", "ServingGateway",
-           "SCENARIOS", "Scenario", "build_scenario"]
+
+@runtime_checkable
+class CacheFrontend(Protocol):
+    """The frontend contract the gateway/simulator drive (DESIGN.md §7),
+    formalized from the duck-typed surface PR 2 introduced. Every
+    frontend — ``NoCache``, ``VectorCache``, SemanticCache-backed
+    ``SISO``, ``TieredCache`` — implements:
+
+    * ``lookup(vectors, ...) -> LookupResult``-like (hit/sim/answer/
+      answer_id/entry/region); richer frontends may take ``now``/
+      ``user_ids``/``tenant_ids`` kwargs, and SISO's ``handle_batch`` is
+      feature-detected first by the gateway.
+    * ``record(vector, answer, answer_id=...)`` — fold one LLM
+      completion back into the cache.
+    * ``stats() -> dict`` — at least ``hit_ratio``.
+    * ``state_dict() -> dict`` — snapshotable state (arrays/scalars);
+      stateless frontends return ``{}``.
+
+    ``runtime_checkable`` verifies member presence only; the shared
+    conformance test (tests/test_serving_config.py) exercises actual
+    call/return shapes across all four frontends.
+    """
+
+    def lookup(self, vectors: np.ndarray, **kwargs): ...
+
+    def record(self, vector: np.ndarray, answer: np.ndarray,
+               **kwargs) -> None: ...
+
+    def stats(self) -> dict: ...
+
+    def state_dict(self) -> dict: ...
+
+
+__all__ = ["CacheFrontend", "CacheConfig", "GatewayRequest", "GatewayStats",
+           "PersistenceConfig", "RefreshConfig", "ReplicationConfig",
+           "ServingConfig", "ServingGateway", "SCENARIOS", "Scenario",
+           "build_scenario"]

@@ -5,9 +5,9 @@
   ``optimal`` (unlimited memory oracle of Fig. 3/4).
 * ``NoCache`` — the vLLM path (every request hits the engine).
 
-All front-ends share the CacheFrontend protocol the simulator drives:
-    lookup(vectors, now)   -> LookupResult-like (hit, sim, answer, ...)
-    insert(vector, answer) -> None           (on LLM completion)
+All front-ends implement the :class:`repro.serving.CacheFrontend`
+protocol (lookup/record/stats/state_dict); ``insert`` is the historical
+spelling of ``record`` and both keep working.
 """
 from __future__ import annotations
 
@@ -43,8 +43,15 @@ class NoCache:
     def insert(self, vector, answer, answer_id: int = -1) -> None:
         pass
 
+    def record(self, vector, answer, answer_id: int = -1) -> None:
+        """CacheFrontend protocol spelling of insert()."""
+        self.insert(vector, answer, answer_id=answer_id)
+
     def stats(self) -> dict:
         return {"hit_ratio": 0.0}
+
+    def state_dict(self) -> dict:
+        return {}       # stateless by definition
 
 
 class VectorCache:
@@ -120,6 +127,19 @@ class VectorCache:
                                            np.atleast_2d(answer)])
             self.answer_id = np.append(self.answer_id, answer_id)
             self.meta = np.append(self.meta, self._fresh_meta())
+
+    def record(self, vector: np.ndarray, answer: np.ndarray,
+               answer_id: int = -1) -> None:
+        """CacheFrontend protocol spelling of insert()."""
+        self.insert(vector, answer, answer_id=answer_id)
+
+    def state_dict(self) -> dict:
+        return {"vectors": self.vectors, "answers": self.answers,
+                "answer_id": self.answer_id, "meta": self.meta,
+                "clock": np.asarray(self._clock),
+                "rr_ptr": np.asarray(self._rr_ptr),
+                "hits": np.asarray(self.hits),
+                "misses": np.asarray(self.misses)}
 
     # --------------------------------------------------------------- policy
 

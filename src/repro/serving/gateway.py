@@ -147,6 +147,32 @@ class ServingGateway:
         self._snap_step = 0
         self._snap_epoch: Optional[int] = None
         self._full_steps: deque = deque(maxlen=2)
+        # LookupResult of the most recent submit(): the HTTP front end
+        # (launch/serve.py) reads per-request region/sim for its X-Cache
+        # headers without a second frontend call
+        self.last_result = None
+
+    @classmethod
+    def from_config(cls, cfg, *, engine: ModelEngine,
+                    embed_fn: Callable[[Sequence[np.ndarray]], np.ndarray],
+                    answer_fn: Optional[Callable] = None,
+                    clock: Optional[Callable[[], float]] = None,
+                    auto_refresh: bool = True) -> "ServingGateway":
+        """Build a fully wired gateway from a
+        :class:`repro.serving.config.ServingConfig` (DESIGN.md §16.4):
+        frontend via ``SISO.from_config`` and persistence attached when
+        ``cfg.persistence`` is set — replacing the legacy construct-then-
+        ``attach_persistence()`` two-step."""
+        from repro.core.siso import SISO
+        gw = cls(SISO.from_config(cfg), engine, embed_fn,
+                 answer_fn=answer_fn, clock=clock, auto_refresh=auto_refresh,
+                 slo_latency=cfg.slo_latency)
+        p = cfg.persistence
+        if p is not None and p.directory:
+            gw.attach_persistence(p.directory, keep=p.keep,
+                                  async_write=p.async_write,
+                                  delta_every=p.delta_every)
+        return gw
 
     # ------------------------------------------------------------------ api
 
@@ -197,6 +223,7 @@ class ServingGateway:
         self.stats.lookup_s.append(time.perf_counter() - t0)
         self.stats.batch_sizes.append(len(batch))
         self.stats.submitted += len(batch)
+        self.last_result = res
         theta = getattr(self.frontend, "theta_r", None)
         if theta is not None:
             self.stats.theta_trace.append((float(now), float(theta)))
@@ -429,7 +456,7 @@ class ServingGateway:
             # intermediate snapshots here would bill recovery wall-clock
             # for payloads that are about to be discarded
             kind = str(np.asarray(
-                self.ckpt.restore(step, keys=["meta"])["meta"]["kind"]))
+                self.ckpt.restore_entry(step, "meta")["kind"]))
             if kind == "delta" and delta_step is None and full_step is None:
                 delta_step = step
             elif kind == "full":

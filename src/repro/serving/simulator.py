@@ -171,17 +171,20 @@ class ServingSimulator:
 def build_system(kind: str, *, dim: int, capacity: int,
                  theta_r: float = 0.86, slo_latency: float = 1.0,
                  llm_latency: float = 0.5, backend: str = "dense"):
-    from repro.core.siso import SISO, SISOConfig
+    from repro.core.siso import SISO
     from repro.serving.baselines import VectorCache
+    from repro.serving.config import CacheConfig, ServingConfig
     if kind == "vllm":
         return NoCache()
     if kind == "gptcache":
         return VectorCache(dim, dim, capacity, policy="lru", theta_r=theta_r)
     if kind in ("siso", "siso-nodta"):
-        cfg = SISOConfig(dim=dim, answer_dim=dim, capacity=capacity,
-                         theta_r=theta_r, backend=backend,
-                         dynamic_threshold=(kind == "siso"))
-        return SISO(cfg, slo_latency=slo_latency, llm_latency=llm_latency)
+        cfg = ServingConfig(
+            cache=CacheConfig(dim=dim, answer_dim=dim, capacity=capacity,
+                              theta_r=theta_r, backend=backend,
+                              dynamic_threshold=(kind == "siso")),
+            slo_latency=slo_latency, llm_latency=llm_latency)
+        return SISO.from_config(cfg)
     raise ValueError(kind)
 
 

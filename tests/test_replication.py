@@ -1,0 +1,379 @@
+"""Delta-streamed cache replication (DESIGN.md §16).
+
+Merge semantics at the unit level (max access count wins, newest answer
+wins, wrong-epoch rejection, reconcile-on-newer-epoch), the in-process
+rejoin path (clone of the freshest replica -> element-wise identical
+lookup streams), cross-replica warming through real gateways, and the
+HTTP front end's X-Cache surface. The SIGKILL rejoin drill runs in
+benchmarks/bench_replica.py (subprocess + disk; too heavy for tier-1).
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.siso import SISO, SISOConfig
+from repro.distributed.replication import (Replica, ReplicaGroup,
+                                           ReplicationConfig,
+                                           ReplicationLog)
+
+D = 16
+
+
+def norm(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _unit(rng, n, d=D):
+    return norm(rng.normal(size=(n, d))).astype(np.float32)
+
+
+def make_siso(train, theta=0.9):
+    siso = SISO(SISOConfig(dim=D, answer_dim=D, capacity=64,
+                           dynamic_threshold=False, theta_r=theta,
+                           refresh_min=10_000))
+    siso.bootstrap(train, train, answer_ids=np.arange(len(train)))
+    return siso
+
+
+class FakeGateway:
+    """The slice of ServingGateway a Replica touches in unit tests."""
+
+    def __init__(self, siso):
+        self.frontend = siso
+        self.t = 0.0
+        self.clock = lambda: self.t
+
+    def submit(self, batch, now=None):
+        raise NotImplementedError   # unit tests publish/apply directly
+
+    def drain(self):
+        pass
+
+
+def make_pair(rng, n_train=24):
+    """Two replicas bootstrapped identically (same centroid ids, same
+    epoch) sharing one log."""
+    train = _unit(rng, n_train)
+    group = ReplicaGroup(ReplicationConfig(apply_budget=64))
+    ra = group.add("a", FakeGateway(make_siso(train)))
+    rb = group.add("b", FakeGateway(make_siso(train)))
+    return group, ra, rb
+
+
+def assert_results_equal(r1, r2, ctx=""):
+    for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+        assert np.array_equal(getattr(r1, f), getattr(r2, f)), (ctx, f)
+
+
+# ---------------------------------------------------------------------------
+# merge semantics
+# ---------------------------------------------------------------------------
+
+
+def test_merge_access_max_wins(rng):
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    # drive access counts apart: A looks up centroid 0 a lot, B centroid 1
+    fa.handle_batch(np.repeat(fa.cache.centroids.vectors[:1], 5, axis=0))
+    fb.handle_batch(np.repeat(fb.cache.centroids.vectors[1:2], 3, axis=0))
+    a0 = fa.cache.centroids.access_count.copy()
+    b0 = fb.cache.centroids.access_count.copy()
+    ra.publish(now=1.0)
+    rb.publish(now=1.0)
+    ra.apply_pending(None)
+    rb.apply_pending(None)
+    want = np.maximum(a0, b0)
+    np.testing.assert_array_equal(fa.cache.centroids.access_count, want)
+    np.testing.assert_array_equal(fb.cache.centroids.access_count, want)
+    assert ra.merged_access > 0 and rb.merged_access > 0
+    # max-merge means a second exchange is a no-op (idempotent)
+    ra.publish(now=2.0)
+    rb.apply_pending(None)
+    np.testing.assert_array_equal(fb.cache.centroids.access_count, want)
+
+
+def test_merge_access_id_intersection(rng):
+    """Peer ids absent locally are skipped; local-only rows keep counts."""
+    group, ra, rb = make_pair(rng)
+    cache = rb.gw.frontend.cache
+    local = cache.centroids.access_count.copy()
+    ghost_ids = cache.centroids.ids + 10_000      # no overlap
+    raised = cache.merge_access(ghost_ids, np.full(len(ghost_ids), 99.0))
+    assert raised == 0
+    np.testing.assert_array_equal(cache.centroids.access_count, local)
+
+
+def test_same_answer_id_newest_wins(rng):
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    aid = 7_000
+    old = _unit(rng, 1)[0]
+    new = _unit(rng, 1)[0]
+    ra.gw.t = 1.0
+    fa.record_llm_answer(old, old, answer_id=aid)    # stamped t=1 via tap
+    ra.publish(now=1.0)
+    rb.apply_pending(None)
+    row = int(np.nonzero(fb.cache.spill.answer_id == aid)[0][0])
+    np.testing.assert_array_equal(fb.cache.spill.answers[row], old)
+
+    rb.gw.t = 5.0
+    fb.record_llm_answer(new, new, answer_id=aid)    # same id, newer (t=5)
+    rb.publish(now=5.0)
+    ra.apply_pending(None)
+    # A converges to the newest answer for the shared identity
+    arow = int(np.nonzero(fa.cache.spill.answer_id == aid)[0][-1])
+    np.testing.assert_array_equal(fa.cache.spill.answers[arow], new)
+    # and B must NOT be clobbered back by A's (now refreshed, but
+    # same-stamp) copy — its freshest row for the id keeps the new answer
+    ra.publish(now=6.0)
+    rb.apply_pending(None)
+    brow = int(np.nonzero(fb.cache.spill.answer_id == aid)[0][-1])
+    np.testing.assert_array_equal(fb.cache.spill.answers[brow], new)
+
+
+def test_update_spill_row_keeps_identity_and_recency(rng):
+    siso = make_siso(_unit(rng, 16))
+    v1, v2 = _unit(rng, 2)
+    siso.record_llm_answer(v1, v1, answer_id=42)
+    cache = siso.cache
+    row = int(np.nonzero(cache.spill.answer_id == 42)[0][0])
+    lru_before = cache._spill_last_use.copy()
+    cache.update_spill_row(row, v2, v2)
+    assert int(cache.spill.answer_id[row]) == 42
+    np.testing.assert_array_equal(cache.spill.vectors[row], v2)
+    np.testing.assert_array_equal(cache._spill_last_use, lru_before)
+    # the patched row serves the new answer through the device path
+    res = cache.lookup(v2[None], 0.9)
+    assert bool(res.hit[0]) and int(res.answer_id[0]) == 42
+    np.testing.assert_array_equal(res.answer[0], v2)
+
+
+def test_wrong_epoch_rejected_and_state_unchanged(rng):
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    # B commits an extra refresh: epochs diverge (B ahead of A)
+    fb.record_llm_answer(*(_unit(rng, 1)[0],) * 2, answer_id=500)
+    fb.refresh()
+    assert fb.refresh_epoch == fa.refresh_epoch + 1
+    fa.record_llm_answer(*(_unit(rng, 1)[0],) * 2, answer_id=501)
+    rec = ra.publish(now=1.0)           # epoch = A's (stale for B)
+    spill_before = fb.cache.spill.answer_id.copy()
+    access_before = fb.cache.centroids.access_count.copy()
+    assert not rb.apply(rec)            # rejected outright
+    assert rb.rejected_epoch == 1
+    np.testing.assert_array_equal(fb.cache.spill.answer_id, spill_before)
+    np.testing.assert_array_equal(fb.cache.centroids.access_count,
+                                  access_before)
+    assert not rb._reconcile_due        # older epoch: no reconcile needed
+
+
+def test_newer_epoch_triggers_reconcile_to_donor(rng):
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    fb.record_llm_answer(*(_unit(rng, 1)[0],) * 2, answer_id=600)
+    fb.refresh()                        # B commits: epoch B > epoch A
+    rb.publish(now=2.0)
+    ra.apply_pending(None)              # A sees the future -> clones B
+    assert ra.reconciles == 1
+    assert fa.refresh_epoch == fb.refresh_epoch
+    # converged: identical lookup streams afterwards
+    probe = _unit(rng, 8)
+    assert_results_equal(fa.handle_batch(probe.copy()),
+                         fb.handle_batch(probe.copy()))
+
+
+def test_rejoin_reconcile_matches_never_killed_replica(rng):
+    """A newcomer joining with reconcile=True clones the freshest peer
+    and then serves element-wise identically to it."""
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    # diverge the pair a little, then barrier-sync
+    for i, v in enumerate(_unit(rng, 6)):
+        (fa if i % 2 else fb).record_llm_answer(v, v, answer_id=100 + i)
+    group.sync_all(now=3.0)
+    train = _unit(np.random.default_rng(0), 24)     # unused fresh frontend
+    rc = group.add("c", FakeGateway(make_siso(train)), reconcile=True)
+    fc = rc.gw.frontend
+    donor = group.donor_for(rc)
+    # clone must not alias the donor (in-process deep copy)
+    assert fc.cache.spill.vectors is not donor.gw.frontend.cache.spill.vectors
+    # probe around live entries (plus pure noise) so hits are exercised
+    dcache = donor.gw.frontend.cache
+    base = np.concatenate([dcache.centroids.vectors[:6],
+                           dcache.spill.vectors[:4], _unit(rng, 6)])
+    probe = norm(base + 0.02 * _unit(rng, len(base))).astype(np.float32)
+    r_donor = donor.gw.frontend.handle_batch(probe.copy(), now=4.0)
+    r_c = fc.handle_batch(probe.copy(), now=4.0)
+    assert_results_equal(r_donor, r_c, "rejoined replica")
+    assert r_donor.hit.any()            # the probe actually exercises hits
+
+
+def test_peer_insert_does_not_distort_counters(rng):
+    """hits/misses are per-replica observations: applying peer deltas
+    must not merge them."""
+    group, ra, rb = make_pair(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    fa.handle_batch(_unit(rng, 10))     # 10 misses observed on A
+    ra.publish(now=1.0)
+    h, m = fb.cache.hits, fb.cache.misses
+    rb.apply_pending(None)
+    assert (fb.cache.hits, fb.cache.misses) == (h, m)
+
+
+# ---------------------------------------------------------------------------
+# gateway-level warming + HTTP front end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serving.engine import ModelEngine
+    cfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ModelEngine(params, cfg, n_slots=2, max_len=48), cfg
+
+
+def _gateway(engine, train, clock):
+    from repro.serving.gateway import ServingGateway
+    gw = ServingGateway(make_siso(train), engine,
+                        embed_fn=lambda vs: np.stack(vs), clock=clock)
+    return gw
+
+
+def test_cross_replica_warming_through_gateways(rng, tiny_engine):
+    """A miss served on replica A warms replica B: B hits a nearby query
+    it never served, via the replication log alone."""
+    from repro.serving.gateway import GatewayRequest
+    engine, _ = tiny_engine
+    train = _unit(rng, 24)
+    t = {"now": 0.0}
+    clock = lambda: t["now"]
+    group = ReplicaGroup(ReplicationConfig(sync_every=1, apply_budget=64))
+    ra = group.add("a", _gateway(engine, train, clock))
+    rb = group.add("b", _gateway(engine, train, clock))
+    fresh = _unit(rng, 1)[0]
+    near = norm(fresh + 0.02 * _unit(rng, 1)[0]).astype(np.float32)
+    assert float(fresh @ near) > 0.95
+    toks = np.asarray([1, 2, 3], np.int32)
+    # rids well above the bootstrap answer-ids (0..23): a colliding id is
+    # treated as already centroid-promoted and deliberately not merged
+    hit = ra.submit([GatewayRequest(rid=1000, model_tokens=toks,
+                                    embed_tokens=fresh, max_new=4,
+                                    answer_vec=fresh)], now=0.0)
+    assert not hit[0]
+    ra.drain()
+    t["now"] = 1.0
+    ra.publish(now=1.0)
+    # B applies at its submit edge and hits the warm entry immediately
+    hit_b = rb.submit([GatewayRequest(rid=1001, model_tokens=toks,
+                                      embed_tokens=near, max_new=4)],
+                      now=1.0)
+    assert hit_b[0], "peer delta should have warmed replica B"
+    assert rb.merged_rows >= 1
+    rb.drain()
+
+
+def test_http_front_end_headers_and_drain(tiny_engine):
+    """POST /v1/query twice: MISS then HIT with region headers; /healthz
+    reports both replicas; drain turns new queries into 503."""
+    from repro.launch.serve import CacheHTTPServer, hash_embed_fn
+    from repro.serving.config import CacheConfig, RefreshConfig, \
+        ServingConfig
+    from repro.serving.gateway import ServingGateway
+    engine, _ = tiny_engine
+    cfg = ServingConfig(cache=CacheConfig(dim=D, answer_dim=D, capacity=64,
+                                          dynamic_threshold=False),
+                        refresh=RefreshConfig(min=10_000))
+    embed = hash_embed_fn(D)
+    gw = ServingGateway.from_config(cfg, engine=engine, embed_fn=embed,
+                                    answer_fn=lambda t: embed([t])[0])
+    server = CacheHTTPServer(("127.0.0.1", 0), [gw], ["r0"])
+    port = server.server_address[1]
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    url = f"http://127.0.0.1:{port}"
+    try:
+        def query(tokens):
+            req = urllib.request.Request(
+                f"{url}/v1/query",
+                data=json.dumps({"tokens": tokens, "max_new": 4}).encode(),
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req) as r:
+                return r.status, dict(r.headers), json.loads(r.read())
+        st, hdr, body = query([5, 6, 7])
+        assert st == 200 and hdr["X-Cache"] == "MISS"
+        assert hdr["X-Cache-Region"] == "miss" and body["hit"] is False
+        assert body["served_by"] == "engine" and body["tokens_out"]
+        st, hdr, body = query([5, 6, 7])        # identical query -> hit
+        assert st == 200 and hdr["X-Cache"] == "HIT"
+        assert hdr["X-Cache-Region"] in ("centroid", "spill")
+        assert body["served_by"] == "cache"
+        with urllib.request.urlopen(f"{url}/healthz") as r:
+            health = json.loads(r.read())
+        assert health["status"] == "serving"
+        assert health["replicas"]["r0"]["submitted"] == 2
+        server.begin_drain()
+        try:
+            st, _, _ = query([9, 9, 9])
+        except urllib.error.HTTPError as e:
+            st = e.code
+        assert st == 503
+        with urllib.request.urlopen(f"{url}/healthz") as r:
+            assert json.loads(r.read())["status"] == "draining"
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)
+
+
+def test_http_front_end_cross_replica_hit(tiny_engine):
+    """Anonymous queries round-robin across replicas: a miss answered on
+    r0 must be published after the engine completes (not at submit time,
+    when the answer is not yet recorded), so the identical query routed
+    next to r1 hits through the replication log."""
+    from repro.launch.serve import CacheHTTPServer, hash_embed_fn
+    from repro.serving.config import CacheConfig, RefreshConfig, \
+        ServingConfig
+    from repro.serving.gateway import ServingGateway
+    engine, _ = tiny_engine
+    cfg = ServingConfig(cache=CacheConfig(dim=D, answer_dim=D, capacity=64,
+                                          dynamic_threshold=False),
+                        refresh=RefreshConfig(min=10_000))
+    embed = hash_embed_fn(D)
+    group = ReplicaGroup(ReplicationConfig(sync_every=1, apply_budget=64))
+    reps = [group.add(name,
+                      ServingGateway.from_config(
+                          cfg, engine=engine, embed_fn=embed,
+                          answer_fn=lambda t: embed([t])[0]))
+            for name in ("r0", "r1")]
+    server = CacheHTTPServer(("127.0.0.1", 0), reps, ["r0", "r1"])
+    port = server.server_address[1]
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    url = f"http://127.0.0.1:{port}"
+    try:
+        def query(tokens):
+            req = urllib.request.Request(
+                f"{url}/v1/query",
+                data=json.dumps({"tokens": tokens, "max_new": 4}).encode(),
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req) as r:
+                return dict(r.headers)
+        hdr = query([5, 6, 7])
+        assert hdr["X-Cache"] == "MISS" and hdr["X-Replica"] == "r0"
+        hdr = query([5, 6, 7])      # same query, next replica in rotation
+        assert hdr["X-Replica"] == "r1"
+        assert hdr["X-Cache"] == "HIT", \
+            "r0's answer should have warmed r1 through the log"
+        assert reps[1].merged_rows >= 1
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)

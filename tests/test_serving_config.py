@@ -1,0 +1,211 @@
+"""ServingConfig API redesign tests (DESIGN.md §16.4).
+
+Three contracts: (1) the CacheFrontend protocol is satisfied by every
+frontend we serve through; (2) new-style ServingConfig construction is
+bit-identical to legacy SISOConfig construction on interleaved
+lookup/record streams; (3) the deprecation shims warn on legacy plane
+kwargs and stay silent through from_config.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.siso import SISO, SISOConfig
+from repro.core.semantic_cache import SemanticCache
+from repro.core.tiered import TieredCache, TieredCacheConfig
+from repro.serving import CacheFrontend
+from repro.serving.baselines import NoCache, VectorCache
+from repro.serving.config import (CacheConfig, PersistenceConfig,
+                                  RefreshConfig, ServingConfig)
+
+D = 16
+
+
+def norm(x):
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _unit(rng, n, d=D):
+    return norm(rng.standard_normal((n, d))).astype(np.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------- protocol
+
+
+def _make_frontends(rng):
+    train = _unit(rng, 32)
+    siso = SISO(SISOConfig(dim=D, answer_dim=D, capacity=64,
+                           dynamic_threshold=False, refresh_min=10_000))
+    siso.bootstrap(train, train, answer_ids=np.arange(len(train)))
+    tiered = TieredCache(SemanticCache(D, D, 32),
+                         TieredCacheConfig(host_capacity=64))
+    return {
+        "nocache": NoCache(),
+        "vector": VectorCache(D, D, 64),
+        "siso": siso,
+        "tiered": tiered,
+    }
+
+
+@pytest.mark.parametrize("kind", ["nocache", "vector", "siso", "tiered"])
+def test_cache_frontend_protocol_conformance(rng, kind):
+    """Every serving frontend satisfies the structural protocol AND the
+    methods actually run (isinstance alone only checks names exist)."""
+    fe = _make_frontends(rng)[kind]
+    assert isinstance(fe, CacheFrontend)
+    v = _unit(rng, 2)
+    if kind == "tiered":        # device-tier signature: theta_r positional
+        res = fe.lookup(v, 0.9)
+    else:
+        res = fe.lookup(v)
+    assert res.hit.shape == (2,)
+    fe.record(v[0], v[0], answer_id=500)
+    sd = fe.state_dict()
+    assert isinstance(sd, dict)
+    st = fe.stats()
+    assert isinstance(st, dict)
+
+
+def test_protocol_rejects_non_frontends():
+    assert not isinstance(object(), CacheFrontend)
+    assert not isinstance({"lookup": 1}, CacheFrontend)
+
+
+# ------------------------------------------------------------- equivalence
+
+
+def _drive(fe, rng_seed):
+    """Interleaved lookup/record stream; returns the full result trace."""
+    rng = np.random.default_rng(rng_seed)
+    out = []
+    for i in range(12):
+        q = _unit(rng, 3)
+        res = fe.handle_batch(q, now=float(i),
+                              user_ids=np.asarray([1, 2, 3]))
+        out.append(res)
+        if i % 3 == 0:
+            v = _unit(rng, 1)[0]
+            fe.record_llm_answer(v, v, answer_id=1000 + i)
+    return out
+
+
+def _assert_traces_equal(old, new):
+    for i, (a, b) in enumerate(zip(old, new)):
+        for f in ("hit", "sim", "answer", "answer_id", "entry", "region"):
+            np.testing.assert_array_equal(
+                getattr(a, f), getattr(b, f),
+                err_msg=f"step {i} field {f} diverged old-vs-new")
+
+
+def test_old_kwargs_vs_serving_config_bit_identical(rng):
+    train = _unit(rng, 48)
+    old = SISO(SISOConfig(dim=D, answer_dim=D, capacity=64, theta_r=0.88,
+                          dynamic_threshold=False, refresh_min=10_000))
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=D, answer_dim=D, capacity=64, theta_r=0.88,
+                          dynamic_threshold=False),
+        refresh=RefreshConfig(min=10_000))
+    new = SISO.from_config(cfg)
+    for fe in (old, new):
+        fe.bootstrap(train, train, answer_ids=np.arange(len(train)))
+    _assert_traces_equal(_drive(old, 11), _drive(new, 11))
+
+
+def test_old_kwargs_vs_serving_config_bit_identical_tiered(rng):
+    train = _unit(rng, 48)
+    tcfg = TieredCacheConfig(host_capacity=128, device_reserve=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = SISO(SISOConfig(dim=D, answer_dim=D, capacity=32,
+                              dynamic_threshold=False, refresh_min=10_000,
+                              tiered=tcfg))
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=D, answer_dim=D, capacity=32,
+                          dynamic_threshold=False),
+        refresh=RefreshConfig(min=10_000), tiering=tcfg)
+    new = SISO.from_config(cfg)
+    for fe in (old, new):
+        fe.bootstrap(train, train, answer_ids=np.arange(len(train)))
+    _assert_traces_equal(_drive(old, 13), _drive(new, 13))
+
+
+def test_config_roundtrip_exact():
+    cfg = ServingConfig(cache=CacheConfig(dim=8, answer_dim=24, capacity=99,
+                                          backend="hnsw", theta_r=0.91),
+                        refresh=RefreshConfig(frac=0.2, min=7,
+                                              async_pipeline=False))
+    low = cfg.to_siso_config()
+    assert low.dim == 8 and low.answer_dim == 24 and low.capacity == 99
+    assert low.backend == "hnsw" and low.refresh_frac == 0.2
+    assert not low.refresh_async
+    back = ServingConfig.from_siso_config(low)
+    assert back.to_siso_config() == low
+    # answer_dim None defaults to dim on lowering
+    assert ServingConfig(cache=CacheConfig(dim=8)).to_siso_config() \
+        .answer_dim == 8
+
+
+# ------------------------------------------------------------------- shims
+
+
+def test_legacy_plane_kwargs_warn_once():
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        SISO(SISOConfig(dim=D, answer_dim=D, capacity=32,
+                        refresh_min=10_000,
+                        tiered=TieredCacheConfig(host_capacity=64)))
+
+
+def test_from_config_does_not_warn():
+    cfg = ServingConfig(cache=CacheConfig(dim=D, answer_dim=D, capacity=32),
+                        refresh=RefreshConfig(min=10_000),
+                        tiering=TieredCacheConfig(host_capacity=64))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SISO.from_config(cfg)
+
+
+def test_plain_legacy_config_does_not_warn():
+    """Plane-free SISOConfig stays warning-free: only the kwargs that
+    moved into nested configs are deprecated."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SISO(SISOConfig(dim=D, answer_dim=D, capacity=32,
+                        refresh_min=10_000))
+
+
+# ---------------------------------------------------------------- gateway
+
+
+def test_gateway_from_config_attaches_persistence(tmp_path):
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serving.engine import ModelEngine
+    from repro.serving.gateway import GatewayRequest, ServingGateway
+    mcfg = get_config("qwen3-14b").reduced().replace(remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), mcfg)
+    eng = ModelEngine(params, mcfg, n_slots=2, max_len=48)
+    rng = np.random.default_rng(3)
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=D, answer_dim=D, capacity=64,
+                          dynamic_threshold=False),
+        refresh=RefreshConfig(min=10_000),
+        persistence=PersistenceConfig(directory=str(tmp_path),
+                                      async_write=False, delta_every=1))
+    gw = ServingGateway.from_config(cfg, engine=eng,
+                                    embed_fn=lambda vs: np.stack(vs))
+    assert gw.ckpt is not None
+    train = _unit(rng, 16)
+    gw.frontend.bootstrap(train, train, answer_ids=np.arange(len(train)))
+    toks = np.asarray([1, 2, 3], np.int32)
+    gw.submit([GatewayRequest(rid=0, model_tokens=toks,
+                              embed_tokens=_unit(rng, 1)[0], max_new=2,
+                              answer_vec=train[0])], now=0.0)
+    gw.drain()
+    assert gw.ckpt.all_steps(), "drain should have snapshotted"

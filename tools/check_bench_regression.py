@@ -116,6 +116,24 @@ METRICS = [
     ("BENCH_quant.json", "latency[-1].equal_to_reference",
      "true", None, None,
      "8-shard quant lookup element-wise identical to 1-device quant"),
+    ("BENCH_replica.json", "hit_lift",
+     "higher", "abs", 0.05,
+     "cross-replica hit-ratio lift of the synced group over isolated "
+     "replicas on the identical zipf-routed stream"),
+    ("BENCH_replica.json", "lift_positive",
+     "true", None, None,
+     "replication log strictly lifts the aggregate hit ratio"),
+    ("BENCH_replica.json", "agg_attainment_sync",
+     "higher", "abs", 0.05,
+     "aggregate SLO attainment of the synced replica group"),
+    ("BENCH_replica.json", "attainment_ok",
+     "true", None, None,
+     "group attainment no worse than a single replica serving the "
+     "whole stream"),
+    ("BENCH_replica.json", "drill.converged",
+     "true", None, None,
+     "rejoined replica's lookup stream element-wise identical to the "
+     "never-killed donor after warm_start + reconcile"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
