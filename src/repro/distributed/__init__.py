@@ -1,10 +1,14 @@
 """Distribution substrate: sharding rules, collectives, gradient
 compression, pipeline stages, elastic re-meshing, fault tolerance,
-and delta-streamed cache replication (DESIGN.md §16)."""
+and delta-streamed cache replication over pluggable transports
+(DESIGN.md §16-§17)."""
 
 from repro.distributed.replication import (DeltaRecord, Replica,
                                            ReplicaGroup, ReplicationConfig,
                                            ReplicationLog)
+from repro.distributed.transport import (InProcessTransport, SocketTransport,
+                                         TransportConfig)
 
 __all__ = ["DeltaRecord", "Replica", "ReplicaGroup", "ReplicationConfig",
-           "ReplicationLog"]
+           "ReplicationLog", "InProcessTransport", "SocketTransport",
+           "TransportConfig"]

@@ -119,6 +119,66 @@ class StepWatchdog:
 
 
 # ---------------------------------------------------------------------------
+# network fault injection (socket replication transport, DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NetworkFaultHooks:
+    """Deterministic link-level fault injection for ``SocketTransport``.
+
+    The transport consults these on its sender threads, per (origin,
+    peer) link: ``delay`` stalls a send, ``drop`` discards the record
+    before it hits the wire (the receiver sees a sequence gap and flags a
+    reconcile), ``partitioned`` makes the peer unreachable until
+    ``heal``-ed (the outbox absorbs traffic, then sheds oldest-first).
+
+    Deterministic by construction — drops fire on a fixed cadence per
+    link rather than a coin flip — so convergence drills are replayable.
+    """
+    delay_s: float = 0.0          # fixed per-record send delay
+    drop_every: int = 0           # drop every Nth record per link (0=off)
+    partitions: set = field(default_factory=set)   # {(origin, peer)}
+    _counts: dict = field(default_factory=dict)    # link -> records seen
+    dropped: int = 0
+    delayed: int = 0
+
+    def delay(self, origin: str, peer: str) -> float:
+        if self.delay_s > 0:
+            self.delayed += 1
+        return self.delay_s
+
+    def drop(self, origin: str, peer: str) -> bool:
+        if self.drop_every <= 0:
+            return False
+        k = (origin, peer)
+        n = self._counts.get(k, 0) + 1
+        self._counts[k] = n
+        if n % self.drop_every == 0:
+            self.dropped += 1
+            return True
+        return False
+
+    def partitioned(self, origin: str, peer: str) -> bool:
+        return (origin, peer) in self.partitions
+
+    def partition(self, origin: str, peer: str,
+                  both_ways: bool = True) -> None:
+        self.partitions.add((origin, peer))
+        if both_ways:
+            self.partitions.add((peer, origin))
+
+    def heal(self, origin: Optional[str] = None,
+             peer: Optional[str] = None) -> None:
+        """Heal one link (both directions) or, with no args, all."""
+        if origin is None:
+            self.partitions.clear()
+            return
+        self.partitions.discard((origin, peer))
+        self.partitions.discard((peer, origin))
+
+
+# ---------------------------------------------------------------------------
 # hard-crash simulation (SIGKILL — no atexit, no flush, no goodbye)
 # ---------------------------------------------------------------------------
 

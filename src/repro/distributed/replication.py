@@ -1,13 +1,22 @@
-"""Delta-streamed cache replication across gateway replicas (DESIGN.md §16).
+"""Delta-streamed cache replication across gateway replicas (DESIGN.md
+§16, transport plane §17).
 
 Production serving is N gateway replicas behind a load balancer; a hit
 learned on one replica should warm all of them. This module repurposes
 the persistence plane's ``state_delta()`` payloads (DESIGN.md §12) as a
-**replication log**: each :class:`Replica` wraps a ``ServingGateway``,
+replication stream: each :class:`Replica` wraps a ``ServingGateway``,
 periodically publishes its device-tier delta as a :class:`DeltaRecord`,
 and folds peer records in on its own budget-sliced refresh tick — so
 replication work rides the same non-blocking slot the RefreshPipeline
 already occupies and never stalls serving.
+
+Dissemination goes through a **Transport** (``repro.distributed
+.transport``): ``InProcessTransport`` is a cursor over the shared
+:class:`ReplicationLog` (the PR 9 behavior, proven element-wise
+identical by the lockstep test), ``SocketTransport`` ships framed
+records over TCP with bounded backpressure and retry/backoff. The
+replica does not care which: it publishes, polls ``next_record()``,
+applies, and acks.
 
 Merge policy (per record, applied only when the record's refresh epoch
 matches the receiver's — the refresh commit is the reconciliation
@@ -24,26 +33,26 @@ barrier, so a delta never straddles a store swap):
 * hit/miss counters and recency state are **never** merged — they are
   per-replica observations, not shared cache content.
 
-A record from a *newer* epoch than the receiver flags a reconcile: at
-the next refresh tick the lagging replica clones the group's freshest
-replica wholesale (deep-copied full ``state_dict()``), which is exactly
-the warm-restart path with an in-process donor instead of a disk
-snapshot. The same clone serves SIGKILL'd replicas rejoining the group
-(``ReplicaGroup.add(..., reconcile=True)`` after a disk
-``warm_start()``) — bench_replica's kill-and-rejoin drill proves the
-rejoined replica's lookup stream is element-wise identical to a
-never-killed replica's.
-
-:class:`ReplicationLog` is an in-process append-only bus with per-replica
-cursors; a networked deployment would swap in a log service — the record
-schema (origin, seq, epoch, stamp, payload) is transport-agnostic.
+A record from a *newer* epoch than the receiver — or a transport-level
+sequence gap (dropped/overflowed records on a lossy link) — flags a
+reconcile: the lagging replica clones the group's freshest replica
+wholesale (deep-copied full ``state_dict()``), or, with no in-process
+donor, fetches the same payload **over the transport**
+(``SocketTransport.fetch_state``). The same clone serves SIGKILL'd
+replicas rejoining the group (``ReplicaGroup.add(..., reconcile=True)``
+after a disk ``warm_start()``) — bench_replica's kill-and-rejoin drills
+(in-process and over sockets) prove the rejoined replica's lookup
+stream is element-wise identical to the donor's.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:                       # no import cycle: transport.py
+    from repro.distributed.transport import TransportConfig  # noqa: F401
 
 
 @dataclass
@@ -55,12 +64,15 @@ class ReplicationConfig:
                              # (0 = never publish: an isolated replica)
     apply_budget: int = 8    # peer records folded in per refresh tick;
                              # drain folds everything pending
+    transport: Optional["TransportConfig"] = None
+                             # None -> in-process shared log (DESIGN.md
+                             # §17; kind="socket" for the TCP backend)
 
 
 @dataclass
 class DeltaRecord:
-    """One replication-log entry: a device-tier ``state_delta()`` payload
-    plus the routing/ordering envelope."""
+    """One replication-stream entry: a device-tier ``state_delta()``
+    payload plus the routing/ordering envelope."""
     origin: str              # publishing replica's name
     seq: int                 # per-origin sequence number
     epoch: int               # origin's refresh epoch at publish time
@@ -72,14 +84,64 @@ class DeltaRecord:
 
 
 class ReplicationLog:
-    """Append-only in-process replication bus. Replicas publish
-    :class:`DeltaRecord`s and consume from their own cursor."""
+    """Append-only in-process replication bus with **per-consumer
+    committed cursors** and compaction: a record every registered
+    consumer has committed past is dropped, so memory stays bounded
+    under an endless publish/apply stream (positions are global — the
+    stream offset, not the list index — so compaction never renumbers).
+    A reconcile that jumps a consumer's cursor to its donor's commits
+    the skipped span too, which is what lets the log compact across a
+    full-clone rejoin."""
 
     def __init__(self) -> None:
         self.records: List[DeltaRecord] = []
+        self.base = 0                     # stream position of records[0]
+        self.total = 0                    # records ever published
+        self.cursors: Dict[str, int] = {}  # consumer -> committed position
+
+    def register(self, name: str) -> int:
+        """Add a consumer; returns its start position. A consumer joining
+        after compaction starts at the base (history before it is only
+        reachable through a reconcile clone)."""
+        pos = self.cursors.get(name, self.base)
+        self.cursors[name] = pos
+        return pos
 
     def publish(self, rec: DeltaRecord) -> None:
         self.records.append(rec)
+        self.total += 1
+
+    def read(self, pos: int) -> Optional[DeltaRecord]:
+        if pos < self.base:
+            raise IndexError(f"position {pos} compacted away "
+                             f"(base={self.base})")
+        i = pos - self.base
+        return self.records[i] if i < len(self.records) else None
+
+    def commit(self, name: str, pos: int) -> None:
+        self.cursors[name] = max(self.cursors.get(name, 0), pos)
+        self.compact()
+
+    def seek(self, name: str, pos: int) -> None:
+        """Non-monotone cursor move — the reconcile-adopt path. A clone
+        adopts its donor's position, which may sit *behind* the clone's
+        own committed cursor (the donor has not consumed its own just-
+        published records); the committed cursor must rewind with it or
+        compaction would strand the reader behind ``base``."""
+        self.cursors[name] = max(self.base, pos)
+        self.compact()
+
+    def compact(self) -> int:
+        """Drop records below every consumer's committed cursor; returns
+        how many were dropped."""
+        if not self.cursors:
+            return 0
+        lo = min(self.cursors.values())
+        n = min(max(0, lo - self.base), len(self.records))
+        if n:
+            del self.records[:n]
+            self.base += n
+        return n
 
     def __len__(self) -> int:
         return len(self.records)
@@ -116,29 +178,45 @@ class Replica:
     instance attributes — the gateway's ``_maybe_refresh`` already calls
     through these on every submit) so peer records are folded in on the
     same budget-sliced slot, at most ``apply_budget`` per tick.
+
+    ``transport`` is anything satisfying the Transport surface
+    (publish / next_record / ack / take_gap / …); a bare
+    :class:`ReplicationLog` is wrapped in an ``InProcessTransport`` for
+    the PR 9 call shape.
     """
 
-    def __init__(self, name: str, gateway, log: ReplicationLog,
+    def __init__(self, name: str, gateway, transport,
                  cfg: Optional[ReplicationConfig] = None) -> None:
         self.name = name
         self.gw = gateway
-        self.log = log
+        if isinstance(transport, ReplicationLog):
+            from repro.distributed.transport import InProcessTransport
+            transport = InProcessTransport(transport, name)
+        self.transport = transport
         self.cfg = cfg or ReplicationConfig()
         self.group: Optional["ReplicaGroup"] = None
         self.seq = 0             # next record number to publish
-        self.cursor = 0          # next log index to consume
         self._since_pub = 0
         self._reconcile_due = False
         # answer_id -> stamp of the publish that carried its current
         # answer; locally recorded rows are stamped at their first publish
         self._stamps: Dict[int, float] = {}
+        # origin -> newest epoch seen in its records (remote-donor pick)
+        self._peer_epochs: Dict[str, int] = {}
         # merge observability (Replica.report / gateway report)
         self.applied = 0
         self.merged_rows = 0
         self.merged_access = 0
         self.rejected_epoch = 0
         self.reconciles = 0
+        self.gap_reconciles = 0
         self._wrap_refresh()
+
+    @property
+    def cursor(self) -> int:
+        """Consumed-record position (the PR 9 log cursor for the
+        in-process backend, a consumed count over sockets)."""
+        return self.transport.position()
 
     # ------------------------------------------------------------ refresh tap
     def _wrap_refresh(self) -> None:
@@ -194,7 +272,7 @@ class Replica:
     # ------------------------------------------------------------- publishing
     def publish(self, now: float) -> DeltaRecord:
         """Publish this replica's current device-tier delta. The payload
-        is deep-copied: ``state_delta()`` returns live arrays, and a log
+        is deep-copied: ``state_delta()`` returns live arrays, and a
         record must describe the instant of publish, not track the
         producer's future mutations."""
         fe = self.gw.frontend
@@ -215,26 +293,34 @@ class Replica:
                           row_stamps=row_stamps)
         self.seq += 1
         self._since_pub = 0
-        self.log.publish(rec)
+        self.transport.publish(rec)
         return rec
 
     # ---------------------------------------------------------------- merging
     def apply_pending(self, budget: Optional[int]) -> int:
-        """Consume peer records from the cursor, applying at most
-        ``budget`` (None = all). Runs a flagged reconcile afterwards —
-        i.e. at the refresh-tick barrier, never mid-lookup."""
+        """Consume peer records from the transport, applying at most
+        ``budget`` (None = all); each consumed record is acked (the
+        cursor commit / delivered-watermark signal). Runs a flagged
+        reconcile afterwards — i.e. at the refresh-tick barrier, never
+        mid-lookup."""
         applied = 0
-        while self.cursor < len(self.log.records):
-            if budget is not None and applied >= budget:
+        while budget is None or applied < budget:
+            rec = self.transport.next_record()
+            if rec is None:
                 break
-            rec = self.log.records[self.cursor]
-            self.cursor += 1
-            if rec.origin == self.name:
-                continue
+            self._peer_epochs[rec.origin] = max(
+                self._peer_epochs.get(rec.origin, 0), int(rec.epoch))
             if self.apply(rec):
                 applied += 1
-        if self._reconcile_due and self.group is not None:
-            self.group.reconcile(self)
+            self.transport.ack(rec)
+        if self.transport.take_gap():
+            # lost records upstream (outbox overflow, injected drop,
+            # partition): deltas are history, so the only safe repair is
+            # the full-clone reconcile path
+            self._reconcile_due = True
+            self.gap_reconciles += 1
+        if self._reconcile_due:
+            self._run_reconcile()
         return applied
 
     def apply(self, rec: DeltaRecord) -> bool:
@@ -306,6 +392,60 @@ class Replica:
             self.merged_rows += 1
         return True
 
+    # -------------------------------------------------------------- reconcile
+    def _reconcile_payload(self, copy: bool = True) -> tuple:
+        """(env, state) a lagging peer needs to clone this replica: the
+        full frontend state plus the stamps/cursor bookkeeping. Served
+        both in-process (``ReplicaGroup.reconcile``) and over the wire
+        (``SocketTransport`` state_provider)."""
+        cur = self.transport.sync_state()
+        if isinstance(cur, dict):
+            # the clone must also expect OUR future records from seq on
+            cur = {**cur, self.name: self.seq}
+        env = {"origin": self.name,
+               "epoch": int(getattr(self.gw.frontend, "refresh_epoch", 0)),
+               "stamps": {str(k): float(v)
+                          for k, v in self._stamps.items()},
+               "cursor": cur}
+        state = self.gw.frontend.state_dict()
+        return env, (_deep_copy_state(state) if copy else state)
+
+    def _adopt_reconcile(self, env: dict, state) -> None:
+        fe = self.gw.frontend
+        fe.load_state(state)
+        if hasattr(fe, "warm_start"):
+            fe.warm_start()
+        self._stamps = {int(k): float(v)
+                        for k, v in env.get("stamps", {}).items()}
+        if env.get("cursor") is not None:
+            self.transport.adopt(env["cursor"])
+        self._reconcile_due = False
+        self.reconciles += 1
+
+    def _run_reconcile(self) -> bool:
+        """Group donor first (deep-copied in-process clone); with no
+        donor in this process, reconcile over the transport."""
+        if self.group is not None and self.group.donor_for(self) is not None:
+            return self.group.reconcile(self)
+        return self._remote_reconcile()
+
+    def _remote_reconcile(self) -> bool:
+        """Fetch a full clone from the freshest peer over the transport
+        (separate-process deployments). A timeout leaves the reconcile
+        flagged — the next apply barrier retries."""
+        fetch = getattr(self.transport, "fetch_state", None)
+        peers = self.transport.peers()
+        if fetch is None or not peers:
+            self._reconcile_due = False      # nobody to reconcile from
+            return False
+        target = max(peers, key=lambda p: (self._peer_epochs.get(p, 0), p))
+        got = fetch(target)
+        if got is None:
+            return False                     # retry at the next barrier
+        env, state = got
+        self._adopt_reconcile(env, state)
+        return True
+
     # ------------------------------------------------------------------ misc
     def drain(self) -> None:
         """Drain the wrapped gateway; the refresh_drain shadow folds all
@@ -324,27 +464,61 @@ class Replica:
                 "merged_access": self.merged_access,
                 "rejected_epoch": self.rejected_epoch,
                 "reconciles": self.reconciles,
-                "epoch": int(getattr(self.gw.frontend, "refresh_epoch", 0))}
+                "gap_reconciles": self.gap_reconciles,
+                "epoch": int(getattr(self.gw.frontend, "refresh_epoch", 0)),
+                "transport": self.transport.stats()}
+
+    def close(self) -> None:
+        self.transport.close()
 
 
 class ReplicaGroup:
-    """N gateway replicas sharing one replication log."""
+    """N gateway replicas sharing one replication transport fabric.
 
-    def __init__(self, cfg: Optional[ReplicationConfig] = None) -> None:
+    The default fabric is the in-process shared log; pass a
+    ``ReplicationConfig`` whose ``transport.kind == "socket"`` (or an
+    explicit ``transport_factory``) for the TCP backend — the group then
+    wires a full mesh (every replica connects to every other) and
+    installs each replica's reconcile state_provider.
+    """
+
+    def __init__(self, cfg: Optional[ReplicationConfig] = None,
+                 transport_factory=None, fault_hooks=None) -> None:
         self.cfg = cfg or ReplicationConfig()
-        self.log = ReplicationLog()
+        self.fault_hooks = fault_hooks
+        tcfg = self.cfg.transport
+        self.kind = "inproc" if tcfg is None else tcfg.kind
+        self.log: Optional[ReplicationLog] = None
+        if transport_factory is not None:
+            self._factory = transport_factory
+            self.kind = "custom"
+        elif self.kind == "socket":
+            from repro.distributed.transport import SocketTransport
+            self._factory = lambda name: SocketTransport(
+                name, tcfg, hooks=fault_hooks)
+        else:
+            from repro.distributed.transport import InProcessTransport
+            self.log = ReplicationLog()
+            self._factory = lambda name: InProcessTransport(self.log, name)
         self.replicas: Dict[str, Replica] = {}
 
     def add(self, name: str, gateway, reconcile: bool = False) -> Replica:
         """Attach a gateway as a named replica. ``reconcile=True`` is the
         rejoin path: the newcomer clones the group's freshest replica
-        instead of replaying log history (records published before the
-        join are superseded by the clone, so its cursor starts at the
+        instead of replaying history (records published before the join
+        are superseded by the clone, so its cursor starts at the
         donor's)."""
         if name in self.replicas:
             raise ValueError(f"replica {name!r} already in group")
-        rep = Replica(name, gateway, self.log, self.cfg)
+        transport = self._factory(name)
+        rep = Replica(name, gateway, transport, self.cfg)
         rep.group = self
+        if getattr(transport, "kind", None) == "socket":
+            transport.state_provider = \
+                lambda r=rep: r._reconcile_payload(copy=False)
+            for other in self.replicas.values():
+                other.transport.connect(name, transport.address)
+                transport.connect(other.name, other.transport.address)
         self.replicas[name] = rep
         if reconcile and len(self.replicas) > 1:
             self.reconcile(rep)
@@ -367,30 +541,55 @@ class ReplicaGroup:
         rep._reconcile_due = False
         if donor is None:
             return False
-        state = _deep_copy_state(donor.gw.frontend.state_dict())
-        rep.gw.frontend.load_state(state)
-        if hasattr(rep.gw.frontend, "warm_start"):
-            rep.gw.frontend.warm_start()
-        rep._stamps = dict(donor._stamps)
-        rep.cursor = donor.cursor
-        rep.reconciles += 1
+        env, state = donor._reconcile_payload(copy=True)
+        rep._adopt_reconcile(env, state)
         return True
 
-    def sync_all(self, now: float) -> None:
+    def sync_all(self, now: float, timeout_s: float = 30.0) -> None:
         """Offline barrier for benches/tests: every replica publishes,
-        then every replica folds everything pending (the drain-time
-        analog of the per-tick budget)."""
+        then every replica folds everything pending. Over sockets the
+        barrier additionally pumps apply loops until every transport's
+        outbox is drained and applied-acked."""
         for rep in self.replicas.values():
             rep.publish(now)
-        for rep in self.replicas.values():
-            rep.apply_pending(None)
+        if self.kind == "inproc":
+            for rep in self.replicas.values():
+                rep.apply_pending(None)
+        else:
+            self.barrier(timeout_s)
+
+    def barrier(self, timeout_s: float = 30.0) -> bool:
+        """Pump every replica's apply loop until all transports report
+        flushed (outboxes empty, newest sent records applied-acked) —
+        the networked analog of the in-process drain barrier."""
+        import time
+        deadline = time.monotonic() + timeout_s
+        while True:
+            for rep in self.replicas.values():
+                rep.apply_pending(None)
+            if all(r.transport.flush(0.0) for r in self.replicas.values()):
+                # one more pass folds anything that landed mid-check
+                for rep in self.replicas.values():
+                    rep.apply_pending(None)
+                if all(r.transport.flush(0.0)
+                       for r in self.replicas.values()):
+                    return True
+            if time.monotonic() >= deadline:
+                return False
+            time.sleep(0.002)
 
     def drain_all(self) -> None:
         for rep in self.replicas.values():
             rep.drain()
+        if self.kind != "inproc":
+            self.barrier()
 
     def report(self) -> dict:
         return {name: rep.report() for name, rep in self.replicas.items()}
+
+    def close(self) -> None:
+        for rep in self.replicas.values():
+            rep.close()
 
 
 __all__ = ["ReplicationConfig", "DeltaRecord", "ReplicationLog",

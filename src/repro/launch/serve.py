@@ -14,19 +14,35 @@ Three modes (``--mode``, DESIGN.md §16.3):
   503, then the listener stops.
 * ``replica`` — the same front end over N gateways in a
   :class:`ReplicaGroup` exchanging replication deltas (DESIGN.md §16),
-  requests routed per-user across replicas.
+  requests routed per-user across replicas. With ``--transport socket``
+  each replica runs in its **own process** with its own engine, deltas
+  flow over TCP loopback (DESIGN.md §17), and the parent becomes a thin
+  router: ``/v1/query`` proxies to the routed worker, ``/healthz``
+  aggregates per-worker replication/transport stats (outbox depth,
+  retries, backoffs, last-applied seqs, reconcile counts) so replication
+  lag is visible without reading logs.
 
   PYTHONPATH=src python -m repro.launch.serve --mode batch --requests 200
   PYTHONPATH=src python -m repro.launch.serve --mode http --port 8080
   PYTHONPATH=src python -m repro.launch.serve --mode replica --replicas 3
+  PYTHONPATH=src python -m repro.launch.serve --mode replica \
+      --transport socket --replicas 3   # one process per replica
+
+Port layout in socket mode (base = ``--port``): the router listens on
+base, worker i's HTTP front end on base+1+i, worker i's replication
+transport on base+1000+i.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import signal
+import subprocess
+import sys
 import threading
 import time
+import urllib.error
+import urllib.request
 import zlib
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional, Sequence
@@ -36,6 +52,18 @@ import numpy as np
 # region int8 -> header tag (LookupResult.region, DESIGN.md §13/§14)
 REGION_NAMES = {-1: "miss", 0: "centroid", 1: "spill", 2: "warm",
                 3: "cold", 4: "overlay"}
+
+
+def user_key(user) -> Optional[int]:
+    """Stable int key for user-sticky routing and the gateway's repeat
+    escape: ints pass through, anything else hashes (crc32 — stable
+    across router and worker processes, unlike ``hash()``)."""
+    if user is None:
+        return None
+    try:
+        return int(user)
+    except (TypeError, ValueError):
+        return zlib.crc32(str(user).encode()) & 0x7FFFFFFF
 
 
 def hash_embed_fn(dim: int):
@@ -84,7 +112,7 @@ class CacheHTTPServer(ThreadingHTTPServer):
         """Replica index for a request: per-user sticky hash (the load-
         balancer shape), round-robin for anonymous traffic."""
         if user is not None:
-            return int(user) % len(self.targets)
+            return user % len(self.targets)
         self._rr += 1
         return (self._rr - 1) % len(self.targets)
 
@@ -94,7 +122,7 @@ class CacheHTTPServer(ThreadingHTTPServer):
         toks = np.asarray(body.get("tokens", []), np.int32)
         if toks.size == 0:
             return 400, {"error": "body needs a non-empty 'tokens' list"}, {}
-        user = body.get("user")
+        user = user_key(body.get("user"))
         with self.lock:
             if self.draining:
                 return 503, {"error": "draining"}, {"Retry-After": "1"}
@@ -106,7 +134,7 @@ class CacheHTTPServer(ThreadingHTTPServer):
             from repro.serving.gateway import GatewayRequest
             req = GatewayRequest(
                 rid=rid, model_tokens=toks,
-                user_id=None if user is None else int(user),
+                user_id=user,
                 tenant=body.get("tenant"),
                 max_new=int(body.get("max_new", 16)))
             done0 = len(gw.done)    # a hit lands right after this index
@@ -151,9 +179,15 @@ class CacheHTTPServer(ThreadingHTTPServer):
         reports = {}
         for name, t in zip(self.names, self.targets):
             gw = self._gw(t)
-            reports[name] = {"submitted": gw.stats.submitted,
-                             "epoch": int(getattr(gw.frontend,
-                                                  "refresh_epoch", 0))}
+            entry = {"submitted": gw.stats.submitted,
+                     "epoch": int(getattr(gw.frontend,
+                                          "refresh_epoch", 0))}
+            if hasattr(t, "report"):
+                # Replica wrapper: replication + transport observability
+                # (pending outbox depth, retries, backoffs, last-applied
+                # seqs, reconcile counts — DESIGN.md §17)
+                entry["replication"] = t.report()
+            reports[name] = entry
         return {"status": "draining" if self.draining else "serving",
                 "replicas": reports}
 
@@ -206,6 +240,109 @@ class _Handler(BaseHTTPRequestHandler):
         self._send(status, payload, headers)
 
 
+class ReplicaRouter(ThreadingHTTPServer):
+    """Parent-process front door for ``--transport socket``: proxies
+    ``/v1/query`` to the routed worker (per-user sticky, round-robin for
+    anonymous traffic) and aggregates every worker's ``/healthz`` —
+    replication lag shows up here, not in worker logs."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr, worker_host: str, worker_ports: Sequence[int],
+                 names: Sequence[str]):
+        super().__init__(addr, _RouterHandler)
+        self.worker_host = worker_host
+        self.worker_ports = list(worker_ports)
+        self.names = list(names)
+        self.draining = False
+        self._rr = 0
+        self._rr_lock = threading.Lock()
+
+    def route(self, user: Optional[int]) -> int:
+        if user is not None:
+            return user % len(self.worker_ports)
+        with self._rr_lock:
+            self._rr += 1
+            return (self._rr - 1) % len(self.worker_ports)
+
+    def forward_query(self, raw_body: bytes, user: Optional[int]
+                      ) -> tuple[int, dict, dict]:
+        if self.draining:
+            return 503, {"error": "draining"}, {"Retry-After": "1"}
+        ix = self.route(user)
+        url = (f"http://{self.worker_host}:{self.worker_ports[ix]}"
+               f"/v1/query")
+        req = urllib.request.Request(
+            url, data=raw_body, method="POST",
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=120.0) as resp:
+                payload = json.loads(resp.read())
+                headers = {k: v for k, v in resp.headers.items()
+                           if k.startswith("X-")}
+                headers["X-Routed-To"] = self.names[ix]
+                return resp.status, payload, headers
+        except urllib.error.HTTPError as e:      # worker said 4xx/5xx
+            try:
+                payload = json.loads(e.read())
+            except (ValueError, json.JSONDecodeError):
+                payload = {"error": f"worker {self.names[ix]}: {e.code}"}
+            return e.code, payload, {"X-Routed-To": self.names[ix]}
+        except (urllib.error.URLError, OSError, TimeoutError):
+            return 503, {"error": f"worker {self.names[ix]} unavailable"}, \
+                {"Retry-After": "1"}
+
+    def health(self) -> dict:
+        replicas = {}
+        statuses = []
+        for name, port in zip(self.names, self.worker_ports):
+            url = f"http://{self.worker_host}:{port}/healthz"
+            try:
+                with urllib.request.urlopen(url, timeout=5.0) as resp:
+                    h = json.loads(resp.read())
+                statuses.append(h.get("status", "unknown"))
+                replicas[name] = h.get("replicas", {}).get(name, h)
+            except (urllib.error.URLError, OSError, ValueError,
+                    TimeoutError):
+                statuses.append("unreachable")
+                replicas[name] = {"status": "unreachable"}
+        status = "draining" if self.draining else (
+            "serving" if all(s == "serving" for s in statuses)
+            else "degraded")
+        return {"status": status, "transport": "socket",
+                "replicas": replicas}
+
+
+class _RouterHandler(BaseHTTPRequestHandler):
+    server_version = "siso-router/1.0"
+
+    def log_message(self, fmt, *args):
+        pass
+
+    _send = _Handler._send
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._send(200, self.server.health())
+        else:
+            self._send(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):
+        if self.path != "/v1/query":
+            self._send(404, {"error": f"no route {self.path}"})
+            return
+        n = int(self.headers.get("Content-Length", 0))
+        raw = self.rfile.read(n) or b"{}"
+        try:
+            user = user_key(json.loads(raw).get("user"))
+        except (ValueError, json.JSONDecodeError):
+            self._send(400, {"error": "malformed JSON body"})
+            return
+        status, payload, headers = self.server.forward_query(raw, user)
+        self._send(status, payload, headers)
+
+
 # ---------------------------------------------------------------------------
 # mode drivers
 # ---------------------------------------------------------------------------
@@ -237,6 +374,10 @@ def run_http(args) -> int:
     """--mode http / --mode replica: N gateways behind the front end."""
     from repro.distributed.replication import ReplicaGroup, ReplicationConfig
     from repro.serving.gateway import ServingGateway
+    if args.mode == "replica" and args.transport == "socket":
+        if args.worker_index >= 0:
+            return _run_socket_worker(args)
+        return _run_socket_parent(args)
     n = args.replicas if args.mode == "replica" else 1
     cfg = _serving_config(args)
     embed = hash_embed_fn(args.dim)
@@ -271,6 +412,122 @@ def run_http(args) -> int:
         server.begin_drain()
     finally:
         server.server_close()
+    return 0
+
+
+def _run_socket_worker(args) -> int:
+    """One replica process: its own engine + gateway + SocketTransport,
+    full mesh to the other workers. Internal entry point — the parent
+    spawns this via ``--worker-index``."""
+    from repro.distributed.replication import Replica, ReplicationConfig
+    from repro.distributed.transport import SocketTransport, TransportConfig
+    from repro.serving.gateway import ServingGateway
+    i, n = args.worker_index, args.replicas
+    name = f"r{i}"
+    cfg = _serving_config(args)
+    embed = hash_embed_fn(args.dim)
+    engine, _ = _make_engine(args)
+    answer_fn = lambda toks: embed([np.asarray(toks)])[0]
+    gw = ServingGateway.from_config(cfg, engine=engine, embed_fn=embed,
+                                    answer_fn=answer_fn)
+    tcfg = TransportConfig(kind="socket", host=args.host,
+                           port=args.port + 1000 + i)
+    transport = SocketTransport(name, tcfg)
+    rep = Replica(name, gw, transport, ReplicationConfig(n_replicas=n))
+    for j in range(n):
+        if j != i:
+            transport.connect(f"r{j}", (args.host, args.port + 1000 + j))
+    server = CacheHTTPServer((args.host, args.port + 1 + i), [rep], [name])
+
+    def _state_provider():
+        # reconcile donor runs on a transport reader thread; serialize
+        # against the serving path, bounded so a wedged lock surfaces as
+        # a requester timeout instead of a deadlock
+        if not server.lock.acquire(timeout=2.0):
+            return None
+        try:
+            return rep._reconcile_payload(copy=False)
+        finally:
+            server.lock.release()
+
+    transport.state_provider = _state_provider
+    stop = threading.Event()
+
+    def _ticker():
+        # fold peer deltas even when no requests arrive (an idle worker
+        # must still apply, ack, and reconcile)
+        while not stop.wait(0.05):
+            with server.lock:
+                if not server.draining:
+                    rep.apply_pending(rep.cfg.apply_budget)
+
+    ticker = threading.Thread(target=_ticker, daemon=True)
+    ticker.start()
+    print(f"worker {name}: http={args.port + 1 + i} "
+          f"transport={args.port + 1000 + i}")
+
+    def _sigterm(signum, frame):
+        server.begin_drain()       # finishes in-flight, folds, publishes
+        transport.flush(5.0)
+        threading.Thread(target=server.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    try:
+        server.serve_forever(poll_interval=0.2)
+    except KeyboardInterrupt:
+        server.begin_drain()
+    finally:
+        stop.set()
+        ticker.join(timeout=2.0)
+        rep.close()
+        server.server_close()
+    return 0
+
+
+def _run_socket_parent(args) -> int:
+    """Parent: spawn one worker process per replica, then route."""
+    names = [f"r{i}" for i in range(args.replicas)]
+    ports = [args.port + 1 + i for i in range(args.replicas)]
+    base = [sys.executable, "-m", "repro.launch.serve",
+            "--mode", "replica", "--transport", "socket",
+            "--replicas", str(args.replicas),
+            "--host", args.host, "--port", str(args.port),
+            "--arch", args.arch, "--dim", str(args.dim),
+            "--capacity", str(args.capacity), "--slots", str(args.slots),
+            "--refresh-min", str(args.refresh_min),
+            "--slo", str(args.slo), "--seed", str(args.seed)]
+    if args.no_dta:
+        base.append("--no-dta")
+    procs = [subprocess.Popen(base + ["--worker-index", str(i)])
+             for i in range(args.replicas)]
+    router = ReplicaRouter((args.host, args.port), args.host, ports, names)
+    host, port = router.server_address[:2]
+    print(f"routing {args.replicas} worker replica(s) on "
+          f"http://{host}:{port} (POST /v1/query, GET /healthz)")
+
+    def _sigterm(signum, frame):
+        print("SIGTERM: draining workers...")
+        router.draining = True
+        for p in procs:
+            if p.poll() is None:
+                p.send_signal(signal.SIGTERM)
+        threading.Thread(target=router.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    try:
+        router.serve_forever(poll_interval=0.2)
+    except KeyboardInterrupt:
+        for p in procs:
+            if p.poll() is None:
+                p.send_signal(signal.SIGTERM)
+    finally:
+        router.server_close()
+        for p in procs:
+            try:
+                p.wait(timeout=30.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
     return 0
 
 
@@ -358,6 +615,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--transport", choices=("inproc", "socket"),
+                    default="inproc")
+    ap.add_argument("--worker-index", type=int, default=-1,
+                    help=argparse.SUPPRESS)   # internal: socket worker
     ap.add_argument("--refresh-min", type=int, default=32)
     ap.add_argument("--slo", type=float, default=1.0)
     args = ap.parse_args(argv)

@@ -35,6 +35,7 @@ from repro.core.tenancy import TenancyConfig
 from repro.core.tiered import TieredCacheConfig
 from repro.distributed.cache_plane import ShardedCacheConfig
 from repro.distributed.replication import ReplicationConfig
+from repro.distributed.transport import TransportConfig
 
 
 @dataclass
@@ -85,6 +86,9 @@ class ServingConfig:
     sharding: Optional[ShardedCacheConfig] = None    # DESIGN.md §11
     persistence: Optional[PersistenceConfig] = None  # DESIGN.md §12
     replication: Optional[ReplicationConfig] = None  # DESIGN.md §16
+    # transport selection lives inside replication:
+    #   ReplicationConfig(transport=TransportConfig(kind="socket", ...))
+    # (DESIGN.md §17; None -> the in-process shared log)
     slo_latency: float = 1.0
     llm_latency: float = 0.5
 
@@ -140,4 +144,4 @@ class ServingConfig:
 
 
 __all__ = ["CacheConfig", "RefreshConfig", "PersistenceConfig",
-           "ReplicationConfig", "ServingConfig"]
+           "ReplicationConfig", "TransportConfig", "ServingConfig"]

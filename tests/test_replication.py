@@ -377,3 +377,306 @@ def test_http_front_end_cross_replica_hit(tiny_engine):
         server.shutdown()
         server.server_close()
         thread.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# transport refactor: PR 9 lockstep equivalence + bounded log (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+
+class _ListTransport:
+    """The pre-transport shared list, verbatim: publish appends; the test
+    reimplements the original cursor loop on top. Never consumed through
+    the Transport surface — a stray next_record() is a no-op so shadowed
+    refresh ticks cannot perturb the old-world replay."""
+
+    kind = "pr9-list"
+
+    def __init__(self, records, name):
+        self.records, self.name = records, name
+
+    def publish(self, rec):
+        self.records.append(rec)
+
+    def next_record(self):
+        return None
+
+    def ack(self, rec):
+        pass
+
+    def take_gap(self):
+        return False
+
+    def position(self):
+        return 0
+
+    def sync_state(self):
+        return 0
+
+    def adopt(self, state):
+        pass
+
+    def peers(self):
+        return []
+
+    def flush(self, timeout_s=0.0):
+        return True
+
+    def stats(self):
+        return {"kind": self.kind}
+
+    def close(self):
+        pass
+
+
+def _pr9_apply_pending(rep, budget):
+    """The original (pre-transport) apply loop, reimplemented verbatim:
+    direct cursor over the shared list, own-origin records skipped
+    without consuming budget, reconcile run at the end of the pass."""
+    from repro.distributed.replication import _deep_copy_state
+    applied = 0
+    recs = rep.transport.records
+    while rep._c9 < len(recs):
+        if budget is not None and applied >= budget:
+            break
+        rec = recs[rep._c9]
+        rep._c9 += 1
+        if rec.origin == rep.name:
+            continue
+        if rep.apply(rec):
+            applied += 1
+    if rep._reconcile_due:
+        donor = max((r for r in rep._world if r is not rep),
+                    key=lambda r: (int(r.gw.frontend.refresh_epoch),
+                                   r.seq, r.name))
+        fe = rep.gw.frontend
+        fe.load_state(_deep_copy_state(donor.gw.frontend.state_dict()))
+        if hasattr(fe, "warm_start"):
+            fe.warm_start()
+        rep._stamps = dict(donor._stamps)
+        rep._c9 = donor._c9
+        rep._reconcile_due = False
+        rep.reconciles += 1
+    return applied
+
+
+def test_lockstep_equivalence_with_pr9_loop(rng):
+    """The refactored InProcessTransport path must be element-wise
+    identical to the pre-transport direct-log behavior over an
+    interleaved submit/publish/apply stream, including budget slicing
+    and an epoch-divergence reconcile (the tentpole's bit-identity
+    acceptance bar)."""
+    train = _unit(rng, 24)
+    # new world: refactored group over InProcessTransport
+    groupN = ReplicaGroup(ReplicationConfig(apply_budget=64))
+    new = {"a": groupN.add("a", FakeGateway(make_siso(train))),
+           "b": groupN.add("b", FakeGateway(make_siso(train)))}
+    # old world: same replicas over the PR 9 shared list + verbatim loop
+    shared = []
+    old = {n: Replica(n, FakeGateway(make_siso(train)),
+                      _ListTransport(shared, n)) for n in ("a", "b")}
+    for rep in old.values():
+        rep._c9 = 0
+        rep._world = list(old.values())
+
+    def both(fn):
+        fn(new)
+        fn(old)
+
+    def apply_pending(world, name, budget):
+        rep = world[name]
+        if isinstance(rep.transport, _ListTransport):
+            _pr9_apply_pending(rep, budget)
+        else:
+            rep.apply_pending(budget)
+
+    def check(ctx):
+        probe = _unit(np.random.default_rng(99), 12)
+        for n in ("a", "b"):
+            fn, fo = new[n].gw.frontend, old[n].gw.frontend
+            # lookups mutate recency/counters identically in both worlds,
+            # so probing inside the lockstep is itself part of the stream
+            assert_results_equal(fn.handle_batch(probe.copy()),
+                                 fo.handle_batch(probe.copy()),
+                                 (ctx, n))
+            assert new[n]._stamps == old[n]._stamps, (ctx, n)
+            for f in ("seq", "applied", "merged_rows", "merged_access",
+                      "rejected_epoch", "reconciles"):
+                assert getattr(new[n], f) == getattr(old[n], f), (ctx, n, f)
+            assert new[n].cursor == old[n]._c9, (ctx, n)
+
+    vecs = _unit(rng, 10)
+    # phase 1: interleaved records + publishes, budget-sliced applies
+    both(lambda w: w["a"].gw.frontend.handle_batch(train[:6].copy()))
+    for i in range(4):
+        name = "a" if i % 2 == 0 else "b"
+
+        def step(w, i=i, name=name):
+            w[name].gw.t = float(i + 1)
+            w[name].gw.frontend.record_llm_answer(
+                vecs[i], vecs[i], answer_id=900 + i)
+            w[name].publish(now=float(i + 1))
+            other = "b" if name == "a" else "a"
+            apply_pending(w, other, 1)       # budget slice: one per tick
+        both(step)
+    check("phase1-sliced")
+    both(lambda w: apply_pending(w, "a", None))
+    both(lambda w: apply_pending(w, "b", None))
+    check("phase1-drained")
+
+    # phase 2: epoch divergence -> reconcile through the group/donor path
+    def diverge(w):
+        w["b"].gw.t = 9.0
+        w["b"].gw.frontend.record_llm_answer(vecs[8], vecs[8],
+                                             answer_id=980)
+        w["b"].gw.frontend.refresh()         # b commits: epoch b > epoch a
+        w["b"].publish(now=9.0)
+        apply_pending(w, "a", None)          # a sees the future -> clones b
+    both(diverge)
+    check("phase2-reconciled")
+
+    # phase 3: traffic continues after the reconcile
+    def tail(w):
+        w["a"].gw.t = 11.0
+        w["a"].gw.frontend.record_llm_answer(vecs[9], vecs[9],
+                                             answer_id=990)
+        w["a"].publish(now=11.0)
+        apply_pending(w, "b", None)
+        w["b"].publish(now=12.0)
+        apply_pending(w, "a", None)
+    both(tail)
+    check("phase3-tail")
+
+
+def test_replication_log_stays_bounded(rng):
+    """Satellite regression: the shared log compacts records consumed by
+    every registered cursor, so memory stays bounded under an endless
+    publish/apply stream (it used to grow without bound)."""
+    group, ra, rb = make_pair(rng)
+    log = group.log
+    peak = 0
+    for i in range(200):
+        ra.gw.t = rb.gw.t = float(i)
+        if i % 5 == 0:
+            v = _unit(rng, 1)[0]
+            ra.gw.frontend.record_llm_answer(v, v, answer_id=2000 + i)
+        ra.publish(now=float(i))
+        rb.publish(now=float(i))
+        ra.apply_pending(None)
+        rb.apply_pending(None)
+        peak = max(peak, len(log.records))
+    assert log.total == 400
+    assert peak <= 4, f"log grew to {peak} live records"
+    assert log.base >= log.total - 4
+    # positions are stream offsets, not list indices: compaction must
+    # never renumber what the cursors point at
+    assert ra.cursor == rb.cursor == log.total
+
+
+def test_late_joiner_after_compaction_reconciles(rng):
+    """A replica registering after history was compacted cannot replay
+    it: the transport surfaces a gap and the newcomer clones the group's
+    freshest replica instead."""
+    group, ra, rb = make_pair(rng)
+    for i in range(8):
+        v = _unit(rng, 1)[0]
+        ra.gw.t = float(i)
+        ra.gw.frontend.record_llm_answer(v, v, answer_id=3000 + i)
+        ra.publish(now=float(i))
+        rb.publish(now=float(i))
+        ra.apply_pending(None)
+        rb.apply_pending(None)
+    assert group.log.base > 0, "test needs compacted history"
+    train = _unit(np.random.default_rng(1), 24)
+    rc = group.add("c", FakeGateway(make_siso(train)))   # no reconcile=True
+    rc.apply_pending(None)
+    assert rc.gap_reconciles == 1 and rc.reconciles == 1
+    donor = group.donor_for(rc)
+    probe = _unit(rng, 8)
+    assert_results_equal(donor.gw.frontend.handle_batch(probe.copy()),
+                         rc.gw.frontend.handle_batch(probe.copy()),
+                         "late joiner")
+
+
+# ---------------------------------------------------------------------------
+# HTTP front end: concurrent clients through a SIGTERM drain
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_clients_during_drain(tiny_engine, tmp_path):
+    """Six clients hammer /v1/query while the drain fires mid-stream:
+    every response is a clean 200 or 503 (no connection resets, no
+    mid-flight errors), both kinds are observed, the drain wrote a
+    snapshot, and post-drain queries are all 503."""
+    from repro.launch.serve import CacheHTTPServer, hash_embed_fn
+    from repro.serving.config import (CacheConfig, PersistenceConfig,
+                                      RefreshConfig, ServingConfig)
+    from repro.serving.gateway import ServingGateway
+    engine, _ = tiny_engine
+    embed = hash_embed_fn(D)
+    cfg = ServingConfig(
+        cache=CacheConfig(dim=D, answer_dim=D, capacity=64,
+                          dynamic_threshold=False),
+        refresh=RefreshConfig(min=10_000),
+        persistence=PersistenceConfig(directory=str(tmp_path),
+                                      async_write=False, delta_every=4))
+    gw = ServingGateway.from_config(cfg, engine=engine, embed_fn=embed,
+                                    answer_fn=lambda t: embed([t])[0])
+    steps0 = list(gw.ckpt.all_steps())
+    server = CacheHTTPServer(("127.0.0.1", 0), [gw], ["r0"])
+    port = server.server_address[1]
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    url = f"http://127.0.0.1:{port}/v1/query"
+    statuses = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def query(tokens):
+        req = urllib.request.Request(
+            url, data=json.dumps({"tokens": tokens, "max_new": 4}).encode(),
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=60.0) as r:
+                return r.status
+        except urllib.error.HTTPError as e:
+            return e.code
+
+    def client(cid):
+        i = 0
+        while not stop.is_set():
+            st = query([cid, i % 3])     # small id space: hits + misses
+            with lock:
+                statuses.append(st)
+            if st == 503:                # drain reached this client
+                return
+            i += 1
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(6)]
+    for t in threads:
+        t.start()
+    # let the clients build up real in-flight traffic, then drain
+    deadline = __import__("time").monotonic() + 30.0
+    while True:
+        with lock:
+            if len(statuses) >= 6:
+                break
+        assert __import__("time").monotonic() < deadline, "clients stalled"
+        __import__("time").sleep(0.01)
+    server.begin_drain()                 # the SIGTERM handler's body
+    stop.set()
+    for t in threads:
+        t.join(timeout=60.0)
+        assert not t.is_alive(), "client thread wedged"
+    try:
+        assert set(statuses) <= {200, 503}, f"unclean statuses: {statuses}"
+        assert 200 in statuses, "no request ever served"
+        # post-drain: everything is refused with 503
+        for c in range(3):
+            assert query([99, c]) == 503
+        # the drain snapshotted through persistence
+        assert list(gw.ckpt.all_steps())[-1] > (steps0[-1] if steps0 else 0)
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)

@@ -1,0 +1,390 @@
+"""Replication transport plane (DESIGN.md §17).
+
+Wire-format roundtrips, socket delivery/ack/flush, bounded-outbox
+backpressure, retry/backoff against a dead listener, injected network
+faults (delay / deterministic drop / partition+heal), gap-triggered
+reconcile, and reconcile-over-transport (``fetch_state``) for replicas
+with no in-process donor. Socket tests all run on loopback with
+OS-assigned ports; waits are bounded and generous, assertions are on
+converged state, so they are slow-host tolerant.
+"""
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from test_replication import (FakeGateway, _unit, assert_results_equal,
+                              make_siso, norm)
+
+from repro.distributed.fault_tolerance import NetworkFaultHooks
+from repro.distributed.replication import (DeltaRecord, Replica,
+                                           ReplicaGroup, ReplicationConfig,
+                                           ReplicationLog)
+from repro.distributed.transport import (InProcessTransport, SocketTransport,
+                                         TransportConfig, decode_record,
+                                         decode_tree, encode_record,
+                                         encode_tree)
+
+
+def _record(origin="a", seq=0, epoch=1, stamp=2.5, n=3):
+    rng = np.random.default_rng(seq + 17)
+    payload = {
+        "centroid_ids": np.arange(4, dtype=np.int64),
+        "centroid_access": rng.random(4),
+        "spill": {"vectors": rng.random((n, 8)).astype(np.float32),
+                  "answers": rng.random((n, 8)).astype(np.float32),
+                  "answer_id": np.arange(n, dtype=np.int64) + 100,
+                  "cluster_size": np.ones(n)},
+        "spill_last_use": rng.random(n)}
+    stamps = {100 + i: float(i) for i in range(n)}
+    return DeltaRecord(origin=origin, seq=seq, epoch=epoch, stamp=stamp,
+                       payload=payload, row_stamps=stamps)
+
+
+def assert_content_equal(r1, r2, ctx=""):
+    """Content-level equality for *independently grown* replicas: row
+    indices (``entry``) legitimately differ when the same rows arrived in
+    different interleavings; answers/ids/regions must not."""
+    for f in ("hit", "sim", "answer", "answer_id", "region"):
+        assert np.array_equal(getattr(r1, f), getattr(r2, f)), (ctx, f)
+
+
+def _recv(transport, n=1, timeout=10.0):
+    """Drain ``n`` records from a transport's inbox, acking each."""
+    out = []
+    deadline = time.monotonic() + timeout
+    while len(out) < n and time.monotonic() < deadline:
+        rec = transport.next_record()
+        if rec is None:
+            time.sleep(0.005)
+            continue
+        transport.ack(rec)
+        out.append(rec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+
+def test_record_roundtrip_preserves_everything():
+    rec = _record(seq=3, epoch=7)
+    rt = decode_record(encode_record(rec))
+    assert (rt.origin, rt.seq, rt.epoch, rt.stamp) == \
+        (rec.origin, rec.seq, rec.epoch, rec.stamp)
+    assert rt.row_stamps == rec.row_stamps
+    for key in ("centroid_ids", "centroid_access", "spill_last_use"):
+        got, want = rt.payload[key], rec.payload[key]
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+    for key in ("vectors", "answers", "answer_id", "cluster_size"):
+        got, want = rt.payload["spill"][key], rec.payload["spill"][key]
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_tree_roundtrip_scalars_and_nesting():
+    env = {"epoch": 3, "stamps": {"41": 1.5}}
+    tree = {"a": np.arange(5), "b": {"c": np.float32(2.5),
+                                     "d": [np.ones(2), np.zeros(3)]}}
+    env2, tree2 = decode_tree(encode_tree(env, tree))
+    assert env2 == env
+    np.testing.assert_array_equal(tree2["a"], tree["a"])
+    assert float(tree2["b"]["c"]) == 2.5
+    np.testing.assert_array_equal(tree2["b"]["d"][1], np.zeros(3))
+
+
+def test_object_payload_rejected():
+    with pytest.raises(TypeError):
+        encode_tree({}, {"bad": np.array([object()], dtype=object)})
+
+
+# ---------------------------------------------------------------------------
+# socket delivery
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def pair():
+    cfg = TransportConfig(kind="socket")
+    ta, tb = SocketTransport("a", cfg), SocketTransport("b", cfg)
+    ta.connect("b", tb.address)
+    tb.connect("a", ta.address)
+    yield ta, tb
+    ta.close()
+    tb.close()
+
+
+def test_socket_delivers_in_order_and_flushes(pair):
+    ta, tb = pair
+    for s in range(5):
+        ta.publish(_record(seq=s))
+    got = _recv(tb, 5)
+    assert [r.seq for r in got] == list(range(5))
+    assert ta.flush(10.0), "publisher should see applied-acks"
+    st = ta.stats()["peers"]["b"]
+    assert st["pending"] == 0 and st["acked_seq"] == 4
+    assert tb.stats()["last_applied"]["a"] == 4
+    assert not tb.take_gap()
+
+
+def test_socket_outbox_overflow_drops_and_receiver_reconciles():
+    """Backpressure: a partitioned peer's outbox sheds oldest-first; after
+    heal the receiver sees the seq jump and flags a reconcile."""
+    hooks = NetworkFaultHooks()
+    cfg = TransportConfig(kind="socket", outbox_cap=4)
+    ta = SocketTransport("a", cfg, hooks=hooks)
+    tb = SocketTransport("b", cfg, hooks=hooks)
+    try:
+        ta.connect("b", tb.address)
+        hooks.partition("a", "b")
+        for s in range(12):                # 12 >> cap=4: 8+ shed
+            ta.publish(_record(seq=s))
+        assert ta.stats()["peers"]["b"]["outbox_dropped"] >= 8
+        hooks.heal()
+        got = _recv(tb, 4)
+        assert [r.seq for r in got] == [8, 9, 10, 11]
+        assert tb.take_gap(), "seq jump must flag reconcile"
+        assert not tb.take_gap(), "gap flag is take-once"
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_socket_retry_backoff_until_listener_appears():
+    """A peer that is not up yet: the sender retries with backoff and
+    delivers once the listener binds (startup-order independence)."""
+    import socket as _socket
+    probe = _socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()                          # reserved-ish: immediate reuse
+    cfg = TransportConfig(kind="socket", connect_timeout_s=0.2,
+                          backoff_base_s=0.02, backoff_max_s=0.1)
+    ta = SocketTransport("a", cfg)
+    tb = None
+    try:
+        ta.connect("b", ("127.0.0.1", port))
+        ta.publish(_record(seq=0))
+        deadline = time.monotonic() + 5.0
+        while ta.stats()["peers"]["b"]["retries"] < 2:
+            assert time.monotonic() < deadline, "no connect retries seen"
+            time.sleep(0.01)
+        tb = SocketTransport("b", TransportConfig(kind="socket", port=port))
+        got = _recv(tb, 1)
+        assert got and got[0].seq == 0
+        assert ta.stats()["peers"]["b"]["backoffs"] >= 2
+    finally:
+        ta.close()
+        if tb is not None:
+            tb.close()
+
+
+def test_socket_injected_drop_creates_gap():
+    hooks = NetworkFaultHooks(drop_every=2)    # every 2nd record lost
+    cfg = TransportConfig(kind="socket")
+    ta = SocketTransport("a", cfg, hooks=hooks)
+    tb = SocketTransport("b", cfg, hooks=hooks)
+    try:
+        ta.connect("b", tb.address)
+        for s in range(6):
+            ta.publish(_record(seq=s))
+        got = _recv(tb, 3)
+        assert [r.seq for r in got] == [0, 2, 4]
+        # flush barriers on the sender thread finishing the whole outbox
+        # (the final record's drop happens after the receiver already has
+        # its 3 survivors, so the counter lags without it)
+        assert ta.flush(10.0)
+        assert hooks.dropped == 3
+        assert tb.take_gap()
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_adopt_acks_superseded_inbox(pair):
+    """Reconcile adoption discards arrivals the donor clone supersedes —
+    but must still advance the origin's ack watermark, or the sender's
+    flush() (and the group barrier) stalls on records that will never
+    be individually applied."""
+    ta, tb = pair
+    for s in range(4):
+        ta.publish(_record(seq=s))
+    deadline = time.monotonic() + 10.0
+    while tb.stats()["inbox_depth"] < 4 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert tb.stats()["inbox_depth"] == 4
+    tb.adopt({"a": 4})            # clone embodies seqs 0..3
+    assert tb.next_record() is None, "superseded arrivals must be dropped"
+    assert ta.flush(10.0), "adopt must ack what it discards"
+
+
+def test_reconnect_restores_ack_watermark():
+    """A conn drop can eat ACKs in flight after the last record on a
+    link. With nothing left to send, the idle sender must reconnect on
+    its own and the peer must re-ack its applied watermark on HELLO —
+    otherwise flush() (and the group barrier) stalls forever."""
+    cfg = TransportConfig(kind="socket")
+    ta = SocketTransport("a", cfg)
+    tb = SocketTransport("b", cfg)
+    try:
+        ta.connect("b", tb.address)
+        for s in range(3):
+            ta.publish(_record(seq=s))
+        assert len(_recv(tb, 3)) == 3
+        assert ta.flush(10.0)
+        peer = ta._peers["b"]
+        with peer.cv:                 # simulate ACKs lost to a conn drop
+            ta._drop_conn(peer)
+            peer.acked = -1
+        assert ta.flush(10.0), "idle reconnect must restore the watermark"
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_fetch_state_roundtrip(pair):
+    ta, tb = pair
+    ta.state_provider = lambda: ({"origin": "a", "epoch": 4,
+                                  "stamps": {"9": 1.0}, "cursor": {}},
+                                 {"w": np.arange(6.0)})
+    env, state = tb.fetch_state("a", timeout_s=10.0)
+    assert env["origin"] == "a" and env["epoch"] == 4
+    np.testing.assert_array_equal(state["w"], np.arange(6.0))
+
+
+def test_fetch_state_times_out_without_provider(pair):
+    ta, tb = pair
+    assert tb.fetch_state("a", timeout_s=0.3) is None
+
+
+# ---------------------------------------------------------------------------
+# replica plane over sockets
+# ---------------------------------------------------------------------------
+
+
+def _socket_group(rng, n=2, hooks=None, **repl_kw):
+    train = _unit(rng, 24)
+    cfg = ReplicationConfig(apply_budget=64,
+                            transport=TransportConfig(kind="socket"),
+                            **repl_kw)
+    group = ReplicaGroup(cfg, fault_hooks=hooks)
+    reps = [group.add(chr(ord("a") + i), FakeGateway(make_siso(train)))
+            for i in range(n)]
+    return group, reps
+
+
+def test_socket_group_replicates_and_converges(rng):
+    group, (ra, rb) = _socket_group(rng)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    try:
+        for i, v in enumerate(_unit(rng, 6)):
+            (fa if i % 2 else fb).record_llm_answer(v, v, answer_id=200 + i)
+        group.sync_all(1.0, timeout_s=30.0)
+        assert group.barrier(30.0)
+        probe = norm(np.concatenate([fa.cache.spill.vectors[:4],
+                                     _unit(rng, 4)])).astype(np.float32)
+        assert_content_equal(fa.handle_batch(probe.copy()),
+                             fb.handle_batch(probe.copy()), "socket pair")
+        assert ra.merged_rows >= 1 and rb.merged_rows >= 1
+    finally:
+        group.close()
+
+
+def test_socket_group_converges_under_faults(rng):
+    """Delays + deterministic drops + a partition that heals: the group
+    still converges — drops surface as gaps, gaps trigger the reconcile
+    clone, and the post-drain probes are element-wise identical."""
+    hooks = NetworkFaultHooks(delay_s=0.002, drop_every=3)
+    group, reps = _socket_group(rng, n=3, hooks=hooks)
+    try:
+        hooks.partition("a", "b")
+        for i, v in enumerate(_unit(rng, 12)):
+            rep = reps[i % 3]
+            rep.gw.frontend.record_llm_answer(v, v, answer_id=300 + i)
+            rep.publish(float(i))
+        hooks.heal()
+        assert group.barrier(60.0), "group did not settle under faults"
+        assert hooks.dropped > 0, "drill must actually exercise drops"
+        total_gaps = sum(r.gap_reconciles for r in reps)
+        assert total_gaps > 0, "drops should have forced gap reconciles"
+        # content convergence across independently-grown replicas...
+        fa = reps[0].gw.frontend
+        probe = norm(np.concatenate([fa.cache.spill.vectors[:4],
+                                     fa.cache.centroids.vectors[:4],
+                                     _unit(rng, 4)])).astype(np.float32)
+        want = fa.handle_batch(probe.copy())
+        for rep in reps[1:]:
+            assert_content_equal(
+                want, rep.gw.frontend.handle_batch(probe.copy()),
+                f"faulted convergence {rep.name}")
+        # ...and element-wise identity after the rejoin-style reconcile
+        # clone from the group's freshest replica (the acceptance bar)
+        donor = group.donor_for(reps[0]) or reps[0]
+        for rep in reps:
+            if rep is not donor:
+                assert group.reconcile(rep)
+        want = donor.gw.frontend.handle_batch(probe.copy())
+        for rep in reps:
+            if rep is not donor:
+                assert_results_equal(
+                    want, rep.gw.frontend.handle_batch(probe.copy()),
+                    f"post-reconcile identity {rep.name}")
+    finally:
+        group.close()
+
+
+def test_remote_reconcile_over_transport(rng):
+    """Standalone replicas (no in-process group): a newer-epoch record
+    triggers reconcile-over-transport — the lagging replica fetches the
+    donor's full state through fetch_state and converges."""
+    train = _unit(rng, 24)
+    cfg = TransportConfig(kind="socket")
+    ta, tb = SocketTransport("a", cfg), SocketTransport("b", cfg)
+    ra = Replica("a", FakeGateway(make_siso(train)), ta)
+    rb = Replica("b", FakeGateway(make_siso(train)), tb)
+    ta.state_provider = lambda: ra._reconcile_payload(copy=False)
+    tb.state_provider = lambda: rb._reconcile_payload(copy=False)
+    ta.connect("b", tb.address)
+    tb.connect("a", ta.address)
+    fa, fb = ra.gw.frontend, rb.gw.frontend
+    try:
+        fa.record_llm_answer(*(_unit(rng, 1)[0],) * 2, answer_id=700)
+        fa.refresh()                       # A commits: epoch A > epoch B
+        ra.publish(1.0)
+        deadline = time.monotonic() + 30.0
+        while rb.reconciles == 0 and time.monotonic() < deadline:
+            rb.apply_pending(None)
+            time.sleep(0.01)
+        assert rb.reconciles == 1, "no reconcile-over-transport happened"
+        assert fb.refresh_epoch == fa.refresh_epoch
+        probe = norm(np.concatenate([fa.cache.centroids.vectors[:4],
+                                     _unit(rng, 4)])).astype(np.float32)
+        assert_results_equal(fa.handle_batch(probe.copy()),
+                             fb.handle_batch(probe.copy()),
+                             "remote reconcile")
+    finally:
+        ra.close()
+        rb.close()
+
+
+def test_inproc_transport_round_robin_matches_log():
+    """InProcessTransport is a faithful cursor: records come back in
+    publish order, own-origin records are skipped, position() matches the
+    PR 9 cursor semantics."""
+    log = ReplicationLog()
+    ta = InProcessTransport(log, "a")
+    tb = InProcessTransport(log, "b")
+    for s in range(3):
+        rec = _record(origin="a", seq=s)
+        ta.publish(rec)
+    assert ta.next_record() is None        # own records skipped
+    assert ta.position() == 3
+    got = [tb.next_record().seq for _ in range(3)]
+    assert got == [0, 1, 2]
+    assert tb.next_record() is None

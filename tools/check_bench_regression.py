@@ -134,6 +134,28 @@ METRICS = [
      "true", None, None,
      "rejoined replica's lookup stream element-wise identical to the "
      "never-killed donor after warm_start + reconcile"),
+    ("BENCH_replica.json", "socket.hit_lift",
+     "higher", "abs", 0.05,
+     "cross-replica hit-ratio lift over the TCP socket transport"),
+    ("BENCH_replica.json", "socket.lift_within_10pct_of_inproc",
+     "true", None, None,
+     "socket-transport hit lift within 10% of the in-process transport "
+     "on the identical workload"),
+    ("BENCH_replica.json", "socket.converged",
+     "true", None, None,
+     "socket replicas' lookup content identical on a clean network"),
+    ("BENCH_replica.json", "socket_faults.converged",
+     "true", None, None,
+     "socket group converged after injected delays/drops and a healed "
+     "partition"),
+    ("BENCH_replica.json", "socket_faults.faults_exercised",
+     "true", None, None,
+     "fault injection actually dropped/delayed records and tripped the "
+     "gap-reconcile path"),
+    ("BENCH_replica.json", "drill_socket.converged",
+     "true", None, None,
+     "SIGKILL'd replica rejoined over TCP (warm_start + fetch_state "
+     "clone) element-wise identical to the surviving donor"),
 ]
 
 _TOK = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
